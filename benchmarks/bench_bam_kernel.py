@@ -1,0 +1,70 @@
+"""BAM Pallas kernel characterization (beyond-paper kernel layer):
+
+  * block-sparsity ratio: fraction of [128,128] tiles the kernel skips
+    per mask type (the compute-term win vs a dense-mask kernel);
+  * memory win: BAM bytes vs materialized-mask bytes at each seq len
+    (the paper's C3 — O(T) vs O(T^2));
+  * interpret-mode wall time with/without block skipping at reduced
+    scale (ordering check only — CPU interpret, not TPU perf).
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bam
+from repro.data.synthetic import random_multimodal_bits
+from repro.kernels.bam_attention import bam_flash_attention
+
+from .common import emit, timeit
+
+
+def tile_skip_fraction(bits, pos, bq=128, bk=128):
+    T = len(bits)
+    nq, nk = T // bq, T // bk
+    m = bam.allowed_mask(jnp.asarray(bits)[None], jnp.asarray(bits)[None],
+                         jnp.asarray(pos)[None], jnp.asarray(pos)[None])[0]
+    m = np.asarray(m)
+    skipped = 0
+    for i in range(nq):
+        for j in range(nk):
+            if not m[i * bq:(i + 1) * bq, j * bk:(j + 1) * bk].any():
+                skipped += 1
+    return skipped / (nq * nk)
+
+
+def run():
+    for mode in ("ep", "ee", "mp"):
+        for T in (2048, 4096):
+            t0 = time.perf_counter()
+            bits, pos = random_multimodal_bits(T, mode, seed=0)
+            frac = tile_skip_fraction(bits, pos)
+            us = (time.perf_counter() - t0) * 1e6
+            bam_bytes = T * 4
+            mask_bytes = T * T
+            emit(f"kernel/skip-{mode}-T{T}", us,
+                 f"tiles_skipped={frac:.3f};"
+                 f"mask_mem_ratio={mask_bytes / bam_bytes:.0f}x")
+
+    # interpret-mode ordering check (reduced scale)
+    T = 256
+    bits_np, pos_np = random_multimodal_bits(T, "mp", seed=0)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, T, 2, 32), jnp.float32)
+    bits = jnp.asarray(bits_np)[None]
+    pos = jnp.asarray(pos_np)[None]
+
+    def f(skip):
+        return bam_flash_attention(q, q, q, bits, bits, pos, pos,
+                                   block_q=32, block_k=32,
+                                   block_skip=skip, interpret=True)
+    us_skip = timeit(f, True, iters=2, warmup=1)
+    us_dense = timeit(f, False, iters=2, warmup=1)
+    emit("kernel/interpret-T256-mp", us_skip,
+         f"skip_vs_dense={us_dense / us_skip:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

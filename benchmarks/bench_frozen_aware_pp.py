@@ -1,0 +1,66 @@
+"""Paper Table 3 / §6.4: frozen-status-aware vs -unaware pipeline
+partitioning, over the paper's VLM/ALM model grid (Table 1 sizes).
+
+Cost oracle: analytic per-layer FLOPs at the paper's workload (1k text
++ modality tokens, microbatch 1); schedule: the deterministic 1F1B
+simulator. ``derived`` = iteration-time speedup of frozen-aware over
+frozen-unaware partitioning (paper reports up to 1.53x)."""
+import time
+
+import numpy as np
+
+from repro.configs.paper_mllm import (audio_encoder_config, llm_config,
+                                      vision_encoder_config)
+from repro.core import pipeline as pp
+from repro.models.mllm import AUDIO_TOKENS, VISION_TOKENS
+
+from .common import emit
+
+TEXT_LEN = 1024
+MICROBATCHES = 24
+STAGES = 8
+
+
+def profiles(kind: str, enc_size: str, llm_size: str = "M"):
+    llm_cfg = llm_config(llm_size)
+    if kind == "vlm":
+        enc_cfg = vision_encoder_config(enc_size)
+        n_tok = VISION_TOKENS
+    else:
+        enc_cfg = audio_encoder_config(enc_size)
+        n_tok = AUDIO_TOKENS
+    enc = pp.profile_from_config(enc_cfg, n_tok, frozen=True,
+                                 name=f"{kind}-{enc_size}")
+    llm = pp.profile_from_config(llm_cfg, TEXT_LEN + n_tok, frozen=True,
+                                 name="llm")
+    # frozen encoders + frozen LLM + trainable projectors (paper §6)
+    pp.analyze_chain([enc, llm], projector_trainable=[True, False])
+    return enc, llm
+
+
+def run(llm_size: str = "M"):
+    rows = []
+    for kind in ("vlm", "alm"):
+        for enc_size in ("S", "M", "L"):
+            enc, llm = profiles(kind, enc_size, llm_size)
+            t0 = time.perf_counter()
+            res = {}
+            for aware in (True, False):
+                g = pp.build_chain_fused([enc, llm], STAGES,
+                                         frozen_aware=aware)
+                sim = pp.simulate_1f1b(g, MICROBATCHES)
+                res[aware] = sim
+            us = (time.perf_counter() - t0) * 1e6
+            speedup = res[False]["iteration_time"] / \
+                res[True]["iteration_time"]
+            name = f"table3/{kind}-{enc_size}-llm{llm_size}"
+            emit(name, us,
+                 f"speedup={speedup:.3f};bubble_aware="
+                 f"{res[True]['bubble_fraction']:.3f};bubble_unaware="
+                 f"{res[False]['bubble_fraction']:.3f}")
+            rows.append((name, speedup))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""§Roofline report: read the dry-run artifacts and emit one row per
+(arch × shape × mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, and per-device memory."""
+import glob
+import json
+import os
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        print("roofline/none,0.0,run `python -m repro.launch.dryrun --all`"
+              " first", flush=True)
+        return
+    for p in files:
+        d = json.load(open(p))
+        tag = f"{d['arch']}__{d['shape']}__{d['mesh']}"
+        if "skipped" in d:
+            print(f"roofline/{tag},0.0,skipped={d['skipped']}", flush=True)
+            continue
+        r = d["roofline"]
+        print(
+            f"roofline/{tag},{d.get('wall_s', 0) * 1e6:.0f},"
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};"
+            f"dominant={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"GB_per_dev={d['per_device_bytes'] / 1e9:.2f};"
+            f"fits={d['fits_16GB']}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

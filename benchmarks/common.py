@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: wall-clock timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived =
+table-specific figure of merit, e.g. speedup or imbalance)."""
+import time
+
+import jax
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocking)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [table3 table4 ...]
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  table3    — frozen-aware vs -unaware pipeline partitioning (§6.4)
+  table2    — modality parallelism vs colocated/replicated (§6.2/§6.3)
+  table4    — CP token distribution: LPT/random/ring/zigzag (§6.5)
+  kernel    — BAM Pallas kernel block-sparsity & memory wins
+  roofline  — §Roofline terms from the dry-run artifacts
+"""
+import sys
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+
+    def on(name):
+        return not want or name in want
+
+    print("name,us_per_call,derived", flush=True)
+    if on("table3"):
+        from benchmarks import bench_frozen_aware_pp
+        bench_frozen_aware_pp.run()
+    if on("table2"):
+        from benchmarks import bench_modality_parallel
+        bench_modality_parallel.run()
+    if on("table4"):
+        from benchmarks import bench_cp_distribution
+        bench_cp_distribution.run()
+    if on("kernel"):
+        from benchmarks import bench_bam_kernel
+        bench_bam_kernel.run()
+    if on("roofline"):
+        from benchmarks import bench_roofline
+        bench_roofline.run()
+
+
+if __name__ == '__main__':
+    main()

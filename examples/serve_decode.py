@@ -1,0 +1,52 @@
+"""Batched decode serving demo: prefill a prompt batch, then stream
+greedy tokens from the KV cache (the decode_32k dry-run path at toy
+scale, incl. a gemma2-style sliding-window config).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.training import steps
+
+
+def main():
+    cfg = get_config("gemma2-9b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    B, prompt_len, gen_len, max_len = 4, 12, 12, 32
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, prompt_len)),
+                         jnp.int32)
+
+    serve = jax.jit(steps.make_serve_step(cfg), donate_argnums=(1,))
+    cache = api.init_cache(cfg, B, max_len)
+
+    # prefill token-by-token (a fused prefill kernel is the XLA forward;
+    # this exercises the serving cache path end to end)
+    tok = prompt[:, :1]
+    for i in range(prompt_len):
+        batch = {"tokens": prompt[:, i:i + 1],
+                 "positions": jnp.full((B, 1), i, jnp.int32)}
+        tok, cache = serve(params, cache, batch)
+
+    generated = []
+    cur = tok[:, None]
+    for i in range(prompt_len, prompt_len + gen_len):
+        batch = {"tokens": cur,
+                 "positions": jnp.full((B, 1), i, jnp.int32)}
+        tok, cache = serve(params, cache, batch)
+        cur = tok[:, None]
+        generated.append(np.asarray(tok))
+    gen = np.stack(generated, axis=1)
+    print(f"served batch={B}: generated {gen.shape[1]} tokens/row")
+    print("sample row 0:", gen[0].tolist())
+    assert gen.shape == (B, gen_len)
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

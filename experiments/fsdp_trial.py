@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import dryrun, sharding as shd, specs as S
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+from repro.configs.base import SHAPES, get_config
+from repro.optim import optimizer as opt
+from repro.training import steps
+
+arch = sys.argv[1]
+shape = SHAPES["train_4k"]
+cfg = dryrun.config_for(arch, shape)
+mesh = make_production_mesh()
+rules = shd.Rules(seq_parallel=False, fsdp=True)
+shd.set_rules(rules); shd.set_mesh(mesh)
+with mesh:
+    p_spec = S.param_specs(cfg)
+    p_sh = dryrun._named(mesh, shd.fsdp_param_pspecs(p_spec, mesh, rules))
+    b_spec = S.train_input_specs(cfg, shape)
+    b_sh = dryrun._named(mesh, shd.fsdp_batch_pspecs(rules, b_spec, mesh))
+    o_spec = S.opt_state_specs(cfg, p_spec)
+    o_sh = {"step": NamedSharding(mesh, P()),
+            "m": dryrun._named(mesh, shd.fsdp_param_pspecs(p_spec, mesh, rules)),
+            "v": dryrun._named(mesh, shd.fsdp_param_pspecs(p_spec, mesh, rules))}
+    fn = steps.make_train_step(cfg)
+    jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                  out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+    args = (dryrun._with_sharding(p_spec, p_sh),
+            dryrun._with_sharding(o_spec, o_sh),
+            dryrun._with_sharding(b_spec, b_sh))
+    compiled = jfn.lower(*args).compile()
+mem = compiled.memory_analysis()
+per_dev = int(mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+prof = H.analyze(compiled.as_text())
+print(f"FSDP {arch} train_4k: compute={prof['flops']/PEAK_FLOPS_BF16:.4f}s "
+      f"mem={prof['hbm_bytes']/HBM_BW:.4f}s "
+      f"coll={prof['collective_bytes']['total']/ICI_BW:.4f}s "
+      f"bytes/dev={per_dev/1e9:.2f}GB")
+for tot, kind, w, b, name in H.top_collectives(compiled.as_text(), 6):
+    print(f"  {tot/1e9:8.1f} GB {kind:15s} x{w:<4d} {name[:110]}")

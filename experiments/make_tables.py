@@ -1,0 +1,34 @@
+"""Regenerate the EXPERIMENTS.md §Roofline table from dry-run JSONs."""
+import glob
+import json
+import sys
+
+
+def main(out_dir="experiments/dryrun"):
+    rows = []
+    skips = []
+    for p in sorted(glob.glob(f"{out_dir}/*.json")):
+        d = json.load(open(p))
+        if "skipped" in d:
+            skips.append((d["arch"], d["shape"], d["mesh"], d["skipped"]))
+            continue
+        r = d["roofline"]
+        rows.append((d["arch"], d["shape"], d["mesh"], r, d))
+    rows.sort(key=lambda x: (x[0], x[1], x[2]))
+    print("| arch | shape | mesh | compute s | memory s | collective s "
+          "| dominant | useful | GB/dev | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, mesh, r, d in rows:
+        print(f"| {arch} | {shape} | {mesh} | {r['compute_s']:.3f} | "
+              f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+              f"{r['dominant'].replace('_s', '')} | "
+              f"{r['useful_flops_ratio']:.2f} | "
+              f"{d['per_device_bytes'] / 1e9:.1f} | {d['fits_16GB']} |")
+    print()
+    print("Skipped (documented, DESIGN.md §long_500k policy):")
+    for arch, shape, mesh, why in skips:
+        print(f"- {arch} × {shape} ({mesh}): {why}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

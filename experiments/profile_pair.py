@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+from repro.launch import dryrun, hlo_analysis as H
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.configs.base import SHAPES
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+shape = SHAPES[shape_name]
+cfg = dryrun.config_for(arch, shape)
+mesh = make_production_mesh()
+rules = dryrun.rules_for(shape, False)
+shd.set_rules(rules); shd.set_mesh(mesh)
+with mesh:
+    # reuse internals to get the compiled text
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    res = dryrun._lower_inner.__wrapped__ if hasattr(dryrun._lower_inner, "__wrapped__") else None
+    # simpler: call lower_pair but we need hlo; replicate minimal logic
+from repro.launch import specs as S
+from repro.optim import optimizer as opt
+from repro.training import steps
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+shd.set_rules(rules); shd.set_mesh(mesh)
+with mesh:
+    p_spec = S.param_specs(cfg)
+    p_sh = dryrun._named(mesh, shd.param_pspecs(p_spec, mesh))
+    if shape.kind == "train":
+        b_spec = S.train_input_specs(cfg, shape)
+        b_sh = dryrun._named(mesh, shd.batch_pspecs(rules, b_spec, mesh))
+        o_spec = S.opt_state_specs(cfg, p_spec)
+        o_sh = dryrun._named(mesh, shd.opt_state_pspecs(rules, p_spec, mesh))
+        o_sh = {"step": NamedSharding(mesh, P()), "m": o_sh, "v": o_sh}
+        fn = steps.make_train_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+        args = (dryrun._with_sharding(p_spec, p_sh),
+                dryrun._with_sharding(o_spec, o_sh),
+                dryrun._with_sharding(b_spec, b_sh))
+    else:
+        c_spec = S.cache_specs(cfg, shape)
+        c_sh = dryrun._named(mesh, shd.cache_pspecs(rules, c_spec, mesh))
+        b_spec = S.decode_input_specs(cfg, shape)
+        b_sh = dryrun._named(mesh, shd.batch_pspecs(rules, b_spec, mesh))
+        fn = steps.make_serve_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                      out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (dryrun._with_sharding(p_spec, p_sh),
+                dryrun._with_sharding(c_spec, c_sh),
+                dryrun._with_sharding(b_spec, b_sh))
+    hlo = jfn.lower(*args).compile().as_text()
+for tot, kind, w, b, name in H.top_collectives(hlo, 15):
+    print(f"{tot/1e9:9.1f} GB  {kind:18s} x{w:<5d} {b/1e6:9.1f} MB  {name}")

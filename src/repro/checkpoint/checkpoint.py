@@ -1,0 +1,82 @@
+"""Sharded checkpointing: pytree -> (manifest.msgpack + *.npy shards).
+
+Layout:
+    <dir>/manifest.msgpack   — treedef paths, shapes, dtypes, step
+    <dir>/arr_<i>.npy        — one file per leaf (memory-mapped on load)
+
+Works for params + optimizer state; frozen modules are saved once and
+skipped on subsequent saves when ``skip_frozen`` (they never change —
+the Cornstarch frozen-status optimization applied to checkpoint I/O).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _paths_and_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save(ckpt_dir: str, tree, *, step: int = 0,
+         frozen_paths: Optional[set] = None,
+         prev_manifest: Optional[dict] = None) -> dict:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    entries = []
+    for i, (path, leaf) in enumerate(_paths_and_leaves(tree)):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i}.npy"
+        if frozen_paths and prev_manifest and \
+                any(path.startswith(fp) for fp in frozen_paths):
+            prev = {e["path"]: e for e in prev_manifest["entries"]}
+            if path in prev and os.path.exists(
+                    os.path.join(ckpt_dir, prev[path]["file"])):
+                entries.append(prev[path])
+                continue
+        np.save(os.path.join(ckpt_dir, fname), arr)
+        entries.append({"path": path, "file": fname,
+                        "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest = {"step": step, "entries": entries}
+    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return manifest
+
+
+def load(ckpt_dir: str, like=None):
+    """Returns (tree, step). If ``like`` is given, restores exactly that
+    structure (validating shapes); otherwise returns {path: array}."""
+    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    arrays = {}
+    for e in manifest["entries"]:
+        arr = np.load(os.path.join(ckpt_dir, e["file"]), mmap_mode="r")
+        assert list(arr.shape) == e["shape"], (e["path"], arr.shape)
+        arrays[e["path"]] = arr
+    if like is None:
+        return arrays, manifest["step"]
+    flat = _paths_and_leaves(like)
+    leaves = []
+    for path, leaf in flat:
+        assert path in arrays, f"missing {path} in checkpoint"
+        a = np.asarray(arrays[path])
+        assert a.shape == tuple(leaf.shape), (path, a.shape, leaf.shape)
+        leaves.append(a.astype(leaf.dtype) if hasattr(leaf, "dtype") else a)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

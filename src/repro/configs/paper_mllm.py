@@ -1,0 +1,62 @@
+"""The paper's own evaluation model zoo (Table 1): Llama-3.1-style LLMs,
+EVA-CLIP-style vision encoders, Whisper-style audio encoders in S/M/L,
+used by the Cornstarch MLLM composition, the pipeline-partitioner
+benchmarks (Tables 2/3) and the end-to-end examples (Fig. 9/10)."""
+from repro.configs.base import EncDecConfig, ModelConfig, register
+
+# Table 1: (layers, hidden) per size
+_LLM = {"S": (16, 2048), "M": (32, 4096), "L": (64, 5120)}
+_VISION = {"S": (40, 1408), "M": (32, 4096), "L": (48, 5120)}
+_AUDIO = {"S": (32, 1920), "M": (40, 3840), "L": (48, 5120)}
+
+
+def llm_config(size: str = "M", reduced: bool = False) -> ModelConfig:
+    L, d = _LLM[size]
+    cfg = ModelConfig(
+        name=f"paper-llama-{size}", family="dense", num_layers=L, d_model=d,
+        num_heads=max(d // 128, 1), num_kv_heads=max(d // 512, 1),
+        d_ff=int(3.5 * d), vocab_size=128256, head_dim=128,
+        rope_theta=5e5, source="arXiv:2407.21783 (Llama 3.1 herd)",
+    )
+    if reduced:
+        cfg = cfg.replace(num_layers=2, d_model=256, num_heads=4,
+                          num_kv_heads=2, head_dim=64, d_ff=512,
+                          vocab_size=512, dtype="float32", remat=False,
+                          seq_shard_activations=False, loss_chunk=0)
+    return cfg
+
+
+def vision_encoder_config(size: str = "M", reduced: bool = False):
+    """EVA-CLIP-style ViT encoder *backbone dims* (patch embeds stubbed;
+    we model the encoder as bidirectional transformer layers)."""
+    L, d = _VISION[size]
+    cfg = ModelConfig(
+        name=f"paper-evaclip-{size}", family="dense", num_layers=L,
+        d_model=d, num_heads=max(d // 88, 1), num_kv_heads=max(d // 88, 1),
+        head_dim=88 if d % 88 == 0 else d // max(d // 88, 1),
+        d_ff=4 * d, vocab_size=1, norm="layernorm", act="gelu",
+        source="arXiv:2303.15389 (EVA-CLIP)",
+    )
+    if reduced:
+        cfg = cfg.replace(num_layers=2, d_model=128, num_heads=2,
+                          num_kv_heads=2, head_dim=64, d_ff=256,
+                          dtype="float32", remat=False,
+                          seq_shard_activations=False)
+    return cfg
+
+
+def audio_encoder_config(size: str = "M", reduced: bool = False):
+    L, d = _AUDIO[size]
+    cfg = ModelConfig(
+        name=f"paper-whisper-{size}", family="dense", num_layers=L,
+        d_model=d, num_heads=max(d // 96, 1), num_kv_heads=max(d // 96, 1),
+        head_dim=96 if d % 96 == 0 else d // max(d // 96, 1),
+        d_ff=4 * d, vocab_size=1, norm="layernorm", act="gelu",
+        source="arXiv:2212.04356 (Whisper)",
+    )
+    if reduced:
+        cfg = cfg.replace(num_layers=2, d_model=128, num_heads=2,
+                          num_kv_heads=2, head_dim=64, d_ff=256,
+                          dtype="float32", remat=False,
+                          seq_shard_activations=False)
+    return cfg

@@ -1,0 +1,223 @@
+"""Bitfield Attention Mask (BAM) — Cornstarch §4.3.1, TPU/JAX adaptation.
+
+A full multimodal attention mask is O(T^2); BAM represents it as a 1-D
+vector of per-token integer bitfields, expanded blockwise only inside the
+attention computation (the Pallas kernel evaluates it in-registers; the
+XLA path lets the compiler fuse it into the softmax).
+
+Bit layout (uint32 — container JAX runs x64-disabled; the paper uses
+int64 with ~60 modality bits. Semantics are identical, widening to two
+lanes of uint32 or uint64 is mechanical):
+
+    [15:0]   attends-set  A_i : bit m set => token i may attend modality m
+    [22:16]  own modality m_i : 0 = text, 1..15 = encoder streams
+    [30:23]  instance id  d_i : packed-document id (multimodal packing)
+    value 0                  : padding token (never attends / attended)
+
+Mask semantics (single source of truth; mirrored by kernels/ref.py and
+validated against each other in tests):
+
+    allowed(i, j) =
+        bits_q[i] != 0 and bits_k[j] != 0          (non-padding)
+        and d_i == d_j                             (same packed document)
+        and (A_i >> m_j) & 1                       (modality-attend bit)
+        and ( m_i == 0  ->  pos_j <= pos_i         (text queries: causal)
+              m_i != 0  ->  m_j == m_i )           (modality: bidirectional
+                                                    within own stream)
+
+Sliding-window (gemma2 local layers) further requires
+``pos_i - pos_j < window`` for text queries.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TEXT = 0
+ATTEND_BITS = 16
+MOD_SHIFT = 16
+MOD_BITS = 7
+INST_SHIFT = 23
+INST_BITS = 8
+
+_ATTEND_MASK = (1 << ATTEND_BITS) - 1
+_MOD_MASK = (1 << MOD_BITS) - 1
+_INST_MASK = (1 << INST_BITS) - 1
+
+
+def encode(attends: int, modality: int, instance: int = 0) -> int:
+    assert 0 <= attends <= _ATTEND_MASK
+    assert 0 <= modality <= _MOD_MASK
+    assert 0 <= instance <= _INST_MASK
+    return attends | (modality << MOD_SHIFT) | (instance << INST_SHIFT)
+
+
+def text_token(attend_modalities: Sequence[int] = (), instance: int = 0) -> int:
+    """A text token attends text + the given encoder modality streams."""
+    a = 1 << TEXT
+    for m in attend_modalities:
+        a |= 1 << m
+    return encode(a, TEXT, instance)
+
+
+def modality_token(modality: int, instance: int = 0) -> int:
+    """Encoder-output tokens attend (bidirectionally) their own stream."""
+    assert modality != TEXT
+    return encode(1 << modality, modality, instance)
+
+
+# -- field extraction (works on jnp or np arrays) ---------------------------
+
+def attends_set(bits):
+    return bits & _ATTEND_MASK
+
+
+def own_modality(bits):
+    return (bits >> MOD_SHIFT) & _MOD_MASK
+
+
+def instance_id(bits):
+    return (bits >> INST_SHIFT) & _INST_MASK
+
+
+# ---------------------------------------------------------------------------
+# Mask expansion (oracle; O(Tq*Tk) — only for tests/XLA-fused paths)
+# ---------------------------------------------------------------------------
+
+def allowed_mask(q_bits, kv_bits, q_pos, kv_pos, window: int = 0):
+    """Expand BAM to a boolean mask.
+
+    q_bits: [..., Tq] uint32; kv_bits: [..., Tk]; q_pos/kv_pos: int32
+    positions (global sequence positions — CP ranks hold permuted blocks,
+    so positions are explicit, not iota).
+    Returns bool [..., Tq, Tk].
+    """
+    qb = q_bits[..., :, None].astype(jnp.uint32)
+    kb = kv_bits[..., None, :].astype(jnp.uint32)
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+
+    nonpad = (qb != 0) & (kb != 0)
+    same_doc = instance_id(qb) == instance_id(kb)
+    bit_ok = ((attends_set(qb) >> own_modality(kb)) & 1) != 0
+    q_is_text = own_modality(qb) == TEXT
+    causal = kp <= qp
+    if window:
+        causal &= (qp - kp) < window
+    within = own_modality(kb) == own_modality(qb)
+    rule = jnp.where(q_is_text, causal, within)
+    return nonpad & same_doc & bit_ok & rule
+
+
+def causal_bits(batch: int, seq: int, dtype=jnp.uint32):
+    """Degenerate BAM for a pure-text causal LM (paper §4.3.1: causal is
+    the 1-D special case)."""
+    return jnp.full((batch, seq), text_token(), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-token workload (row-sums of the mask) — O(T * M) via per-modality
+# cumulative counts, no O(T^2) materialization. Used by the token
+# distribution planners (§4.3.2).
+# ---------------------------------------------------------------------------
+
+def token_workload(bits: np.ndarray, pos: np.ndarray,
+                   window: int = 0) -> np.ndarray:
+    """bits/pos: [T] (numpy, host-side planning). Returns float64 [T]:
+    W_i = number of keys token i attends = row-sum of allowed_mask."""
+    bits = np.asarray(bits, np.uint32)
+    pos = np.asarray(pos, np.int64)
+    T = bits.shape[0]
+    order = np.argsort(pos, kind="stable")
+    inv = np.empty_like(order)
+    inv[order] = np.arange(T)
+
+    mod = (bits >> MOD_SHIFT) & _MOD_MASK
+    inst = (bits >> INST_SHIFT) & _INST_MASK
+    att = bits & _ATTEND_MASK
+    nonpad = bits != 0
+
+    W = np.zeros(T, np.float64)
+    for d in np.unique(inst[nonpad]):
+        sel = nonpad & (inst == d)
+        idx = np.where(sel)[0]
+        idx = idx[np.argsort(pos[idx], kind="stable")]
+        m = mod[idx]
+        a = att[idx]
+        n = idx.shape[0]
+        # cumulative count of keys of each modality up to (and incl) position
+        mods_here = np.unique(m)
+        cum = {mm: np.cumsum(m == mm) for mm in mods_here}
+        total = {mm: int((m == mm).sum()) for mm in mods_here}
+        w = np.zeros(n, np.float64)
+        text_rows = m == TEXT
+        for mm in mods_here:
+            bit_ok = ((a >> int(mm)) & 1) != 0
+            # text queries: causal count of modality-mm keys <= my position
+            w += np.where(text_rows & bit_ok, cum[mm], 0.0)
+            # modality queries: bidirectional within own stream only
+            if mm != TEXT:
+                w += np.where((m == mm) & bit_ok, float(total[mm]), 0.0)
+        if window:
+            # subtract out-of-window causal keys for text rows (approx:
+            # window only used with pure-text local layers)
+            w_uncapped = w
+            w = np.where(text_rows, np.minimum(w_uncapped, window), w)
+        W[idx] = w
+    return W
+
+
+def block_workload(bits: np.ndarray, pos: np.ndarray, block: int,
+                   window: int = 0) -> np.ndarray:
+    """Sum token workloads over contiguous blocks of ``block`` tokens
+    (paper: assignment is done at block granularity for accelerator
+    efficiency)."""
+    W = token_workload(bits, pos, window)
+    T = W.shape[0]
+    nb = (T + block - 1) // block
+    padded = np.zeros(nb * block, np.float64)
+    padded[:T] = W
+    return padded.reshape(nb, block).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# BAM construction for the synthetic multimodal batches (EP / EE / MP —
+# paper Fig. 11 mask types)
+# ---------------------------------------------------------------------------
+
+def build_sample_bits(segments: Sequence[Tuple[str, int, int]],
+                      seq_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    """segments: list of (kind, modality_id, length); kind in
+    {"text", "mod"}; instance id increments on a "doc" boundary marker
+    ("newdoc", 0, 0). Returns (bits [T] uint32, pos [T] int32), padded
+    with zeros to seq_len."""
+    bits, pos = [], []
+    inst = 0
+    p = 0
+    seen_mods: set[int] = set()
+    for kind, m, n in segments:
+        if kind == "newdoc":
+            inst += 1
+            p = 0
+            seen_mods = set()
+            continue
+        if kind == "mod":
+            seen_mods.add(m)
+            for _ in range(n):
+                bits.append(modality_token(m, inst))
+                pos.append(p)
+                p += 1
+        else:
+            for _ in range(n):
+                bits.append(text_token(sorted(seen_mods), inst))
+                pos.append(p)
+                p += 1
+    assert len(bits) <= seq_len, (len(bits), seq_len)
+    out_b = np.zeros(seq_len, np.uint32)
+    out_p = np.zeros(seq_len, np.int32)
+    out_b[: len(bits)] = bits
+    out_p[: len(pos)] = pos
+    return out_b, out_p

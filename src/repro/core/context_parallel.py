@@ -1,0 +1,200 @@
+"""Multimodality-aware context parallelism (Cornstarch §4.3 + §5.3).
+
+Each CP rank holds the token *blocks* assigned by a distribution plan
+(core/distribution.py) — note positions/bitfields travel with the
+tokens, since after LPT assignment a rank's tokens are NOT contiguous.
+
+Implementations:
+
+* ``allgather`` (paper §5.3, Llama-3 style, the default): every rank
+  all-gathers K/V (+ kv bits/positions) and computes attention rows for
+  its local queries only. Load balance therefore depends ONLY on the
+  per-rank row workloads — exactly what the LPT plan equalizes.
+* ``ring``: P2P ring (ppermute) with online-softmax combination —
+  the baseline the paper compares against (and the fallback for which
+  random distribution is provided).
+
+Both run under ``shard_map`` over a named mesh axis. A collective-free
+reference (``cp_reference``) computes identical math for single-device
+tests; multi-device equivalence is tested in a subprocess with
+``--xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import bam
+from repro.core.distribution import Plan
+
+
+# ---------------------------------------------------------------------------
+# Plan application (host side): permute tokens so each rank's assigned
+# blocks are contiguous in the sharded layout.
+# ---------------------------------------------------------------------------
+
+def plan_permutation(plan: Plan, seq_len: int) -> np.ndarray:
+    """perm[i] = source token index of the i-th token in CP layout.
+    Ranks get equal token counts (plans balance block *workloads*, and
+    block counts may differ by rank; we pad rank slices to the max count
+    with the trailing blocks of the least loaded ranks — in practice
+    LPT/zigzag produce equal counts for uniform block workloads)."""
+    slices = plan.rank_token_slices()
+    counts = [len(s) for s in slices]
+    if len(set(counts)) != 1:
+        # rebalance counts while keeping workload order: move whole
+        # blocks from over-full to under-full ranks (rare path)
+        target = seq_len // plan.num_ranks
+        extra = []
+        for g, s in enumerate(slices):
+            if len(s) > target:
+                extra.extend(s[target:])
+                slices[g] = s[:target]
+        for g, s in enumerate(slices):
+            need = target - len(s)
+            if need > 0:
+                slices[g] = np.concatenate([s, extra[:need]])
+                extra = extra[need:]
+    return np.concatenate(slices).astype(np.int64)
+
+
+def apply_plan(tree, perm: np.ndarray, axis: int = 1):
+    """Gather ``axis`` (the token axis) of every array by perm."""
+    return jax.tree.map(lambda a: jnp.take(a, perm, axis=axis), tree)
+
+
+def invert_perm(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return inv
+
+
+# ---------------------------------------------------------------------------
+# Local attention with explicit (m, l) stats for online combination
+# ---------------------------------------------------------------------------
+
+def _masked_attn_stats(q, k, v, mask, scale, softcap: float = 0.0):
+    """Returns (acc [B,H,Tq,hd] = sum exp(l-m)·V, m [B,H,Tq], l [B,H,Tq])
+    — unnormalized flash-attention partials for cross-chunk combine."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    neg = -1e30
+    logits = jnp.where(mask, logits, neg)
+    m = jnp.max(logits, axis=-1)                         # [B,H,Tq]
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v.dtype), v)
+    return acc.astype(jnp.float32), m, l
+
+
+def _combine_stats(acc1, m1, l1, acc2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return acc1 * a1[..., None] + acc2 * a2[..., None], m, l1 * a1 + l2 * a2
+
+
+def _finish(acc, m, l, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    return jnp.einsum("bhqd->bqhd", out).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# CP attention bodies (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _allgather_body(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
+                    axis_name: str, softcap: float, window: int):
+    """Per-rank: local queries [B,Tq/G]; gather all K/V."""
+    k_all = lax.all_gather(k, axis_name, axis=1, tiled=True)
+    v_all = lax.all_gather(v, axis_name, axis=1, tiled=True)
+    kb_all = lax.all_gather(kv_bits, axis_name, axis=1, tiled=True)
+    kp_all = lax.all_gather(kv_pos, axis_name, axis=1, tiled=True)
+    mask = bam.allowed_mask(q_bits, kb_all, q_pos, kp_all, window)[:, None]
+    scale = q.shape[-1] ** -0.5
+    acc, m, l = _masked_attn_stats(q, k_all, v_all, mask, scale, softcap)
+    return _finish(acc, m, l, q.dtype)
+
+
+def _ring_body(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
+               axis_name: str, softcap: float, window: int):
+    """P2P ring: pass K/V chunks around, combine online-softmax stats."""
+    G = lax.psum(1, axis_name)
+    scale = q.shape[-1] ** -0.5
+    B, Tq, H, hd = q.shape
+
+    def step(i, carry):
+        acc, m, l, kc, vc, kb, kp = carry
+        mask = bam.allowed_mask(q_bits, kb, q_pos, kp, window)[:, None]
+        a2, m2, l2 = _masked_attn_stats(q, kc, vc, mask, scale, softcap)
+        acc, m, l = _combine_stats(acc, m, l, a2, m2, l2)
+        perm = [(j, (j + 1) % G) for j in range(G)]
+        kc = lax.ppermute(kc, axis_name, perm)
+        vc = lax.ppermute(vc, axis_name, perm)
+        kb = lax.ppermute(kb, axis_name, perm)
+        kp = lax.ppermute(kp, axis_name, perm)
+        return acc, m, l, kc, vc, kb, kp
+
+    acc0 = jnp.zeros((B, H, Tq, hd), jnp.float32)
+    m0 = jnp.full((B, H, Tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    acc, m, l, *_ = lax.fori_loop(
+        0, G, step, (acc0, m0, l0, k, v, kv_bits, kv_pos))
+    return _finish(acc, m, l, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def cp_attention(mesh, axis_name: str, q, k, v, q_bits, kv_bits, q_pos,
+                 kv_pos, *, method: str = "allgather", softcap: float = 0.0,
+                 window: int = 0):
+    """Inputs are GLOBAL arrays already permuted to plan layout
+    ([B, T, H, hd] etc.); shard_map splits the token axis over
+    ``axis_name``. Output is the global [B, T, H, hd] in plan layout."""
+    body = {"allgather": _allgather_body, "ring": _ring_body}[method]
+    fn = functools.partial(body, axis_name=axis_name, softcap=softcap,
+                           window=window)
+    tok = P(None, axis_name)
+    tok3 = P(None, axis_name, None, None)
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(tok3, tok3, tok3, tok, tok, tok, tok),
+        out_specs=tok3, check_rep=False,
+    )(q, k, v, q_bits, kv_bits, q_pos, kv_pos)
+
+
+def cp_reference(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
+                 softcap: float = 0.0, window: int = 0):
+    """Collective-free oracle: identical math on the full arrays."""
+    mask = bam.allowed_mask(q_bits, kv_bits, q_pos, kv_pos, window)[:, None]
+    scale = q.shape[-1] ** -0.5
+    acc, m, l = _masked_attn_stats(q, k, v, mask, scale, softcap)
+    return _finish(acc, m, l, q.dtype)
+
+
+def simulate_rank_workloads(plan: Plan, bits: np.ndarray, pos: np.ndarray,
+                            window: int = 0) -> np.ndarray:
+    """Per-rank attention FLOPs proxy (row workload sums) used by the
+    Table-4 style benchmark: the max over ranks bounds the attention
+    step time under all-gather CP."""
+    W = bam.token_workload(bits, pos, window)
+    loads = np.zeros(plan.num_ranks)
+    bs = plan.block_size
+    for g, blocks in enumerate(plan.per_rank_blocks):
+        for b in blocks:
+            loads[g] += W[b * bs:(b + 1) * bs].sum()
+    return loads

@@ -1,0 +1,104 @@
+"""jit'd public wrapper for BAM attention.
+
+Dispatch:
+  impl="xla"           — fused-XLA reference math (production dry-run
+                         path on this CPU container; GSPMD-sharded)
+  impl="bam_kernel"    — Pallas TPU kernel (real hardware)
+  impl="bam_interpret" — Pallas kernel body interpreted on CPU
+                         (correctness validation; what tests sweep)
+
+Handles GQA, padding to block multiples (pad tokens get bits=0 ⇒ never
+attend/attended), and the custom_vjp whose backward recomputes through
+the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bam_attention import bam_flash_attention
+from repro.kernels.ref import bam_attention_ref
+
+
+def _pad_axis(x, to: int, axis: int, value=0):
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11))
+def _bam_attention(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                   softcap, window, impl, block_q, block_k):
+    return _fwd_impl(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                     softcap, window, impl, block_q, block_k)
+
+
+def _fwd_impl(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+              softcap, window, impl, block_q, block_k):
+    if impl == "xla":
+        return bam_attention_ref(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                                 softcap=softcap, window=window)
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    Tq_p = -(-Tq // block_q) * block_q
+    Tk_p = -(-Tk // block_k) * block_k
+    qp = _pad_axis(q, Tq_p, 1)
+    kp_ = _pad_axis(k, Tk_p, 1)
+    vp = _pad_axis(v, Tk_p, 1)
+    qbp = _pad_axis(q_bits, Tq_p, 1)       # bits=0 -> masked
+    kbp = _pad_axis(kv_bits, Tk_p, 1)
+    qpp = _pad_axis(q_pos, Tq_p, 1)
+    kpp = _pad_axis(kv_pos, Tk_p, 1)
+    out = bam_flash_attention(
+        qp, kp_, vp, qbp, kbp, qpp, kpp, softcap=softcap, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "bam_interpret"))
+    return out[:, :Tq]
+
+
+def _fwd_vjp(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+             softcap, window, impl, block_q, block_k):
+    out = _fwd_impl(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                    softcap, window, impl, block_q, block_k)
+    return out, (q, k, v, q_bits, kv_bits, q_pos, kv_pos)
+
+
+def _bwd_vjp(softcap, window, impl, block_q, block_k, res, g):
+    q, k, v, q_bits, kv_bits, q_pos, kv_pos = res
+
+    def f(q, k, v):
+        return bam_attention_ref(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                                 softcap=softcap, window=window)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None, None
+
+
+_bam_attention.defvjp(_fwd_vjp, _bwd_vjp)
+
+
+def bam_attention(q, k, v, q_bits, kv_bits, q_pos=None, kv_pos=None, *,
+                  softcap: float = 0.0, window: int = 0,
+                  impl: str = "xla", block_q: int = 128,
+                  block_k: int = 128):
+    """Public BAM attention. q: [B,Tq,H,hd]; k/v: [B,Tk,Hkv,hd];
+    bits uint32 [B,T*]; pos default = iota."""
+    B, Tq = q.shape[:2]
+    Tk = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Tq, dtype=jnp.int32)[None],
+                                 (B, Tq))
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(Tk, dtype=jnp.int32)[None],
+                                  (B, Tk))
+    return _bam_attention(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                          float(softcap), int(window), impl,
+                          int(block_q), int(block_k))

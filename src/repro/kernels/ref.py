@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the BAM flash-attention kernel.
+
+Deliberately independent of the kernel code path: materializes the full
+boolean mask via ``repro.core.bam.allowed_mask`` (the semantics'
+single source of truth) and runs a numerically-stable masked softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bam
+
+
+def bam_attention_ref(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
+                      softcap: float = 0.0, window: int = 0):
+    """q: [B,Tq,H,hd]; k/v: [B,Tk,Hkv,hd] (GQA: H % Hkv == 0);
+    bits: uint32 [B,T*]; pos: int32 [B,T*]. Returns [B,Tq,H,hd]."""
+    B, Tq, H, hd = q.shape
+    Hkv = k.shape[2]
+    n_rep = H // Hkv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = bam.allowed_mask(q_bits, kv_bits, q_pos, kv_pos, window)[:, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)   # fully-masked rows
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)

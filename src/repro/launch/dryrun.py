@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices (DESIGN.md §5).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract memory / cost / collective stats.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multipod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per combination this produces <out>/<arch>__<shape>__<mesh>.json with:
+  memory_analysis   (bytes per device: args/output/temp/code)
+  cost_analysis     (HLO FLOPs, bytes accessed — per-device program)
+  collectives       (bytes by kind, parsed from the partitioned HLO)
+  roofline          (compute/memory/collective terms in seconds,
+                     dominant term, MODEL_FLOPS ratio — §Roofline)
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                get_config, list_archs, pair_skip_reason)
+from repro.launch import sharding as shd
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch import specs as S
+from repro.models import api
+from repro.optim import optimizer as opt
+from repro.training import steps
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer sizes of every collective op in the partitioned
+    HLO (per-device program)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # e.g. "%ag = bf16[16,256,4608]{2,1,0} all-gather("  (also tuples)
+    pat = re.compile(
+        r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))[^=]*?\s("
+        + "|".join(_COLLECTIVES) + r")\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in pat.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_pat.findall(type_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out.update(out_counts)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N_active·D train / 2·N_active·D prefill /
+    2·N_active·B (+ attention KV sweep) decode — global, all chips."""
+    N = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * N * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * N * shape.global_batch * shape.seq_len
+    # decode: one token per row + attention over the cache
+    attn = 4.0 * shape.global_batch * shape.seq_len * cfg.num_layers * \
+        cfg.num_heads * cfg.head_dim
+    return 2.0 * N * shape.global_batch + attn
+
+
+def rules_for(shape: ShapeConfig, multi_pod: bool,
+              family: str = "dense") -> shd.Rules:
+    if shape.kind == "train":
+        # §Perf: FSDP-style sharding beats Megatron-TP by ~3.3x on the
+        # collective term for non-MoE *training* at this mesh (batch 256
+        # divides all 256/512 chips). Prefill (batch 32 < chips) keeps
+        # Megatron-TP + sequence parallelism — FSDP regressed it 15x
+        # (see EXPERIMENTS.md §Perf, refuted-hypothesis log). MoE keeps
+        # TP/EP rules for its expert dims.
+        fsdp = family != "moe"
+        return shd.Rules(multi_pod=multi_pod, seq_parallel=not fsdp,
+                         fsdp=fsdp)
+    if shape.kind == "prefill":
+        return shd.Rules(multi_pod=multi_pod, seq_parallel=True)
+    if shape.name == "long_500k":
+        return shd.Rules(multi_pod=multi_pod, seq_parallel=False,
+                         shard_cache_seq=True)
+    return shd.Rules(multi_pod=multi_pod, seq_parallel=False)
+
+
+def config_for(arch: str, shape: ShapeConfig) -> ModelConfig:
+    cfg = get_config(arch)
+    if arch == "gemma2-9b" and shape.name == "long_500k":
+        from repro.configs.gemma2_9b import long_context_variant
+        cfg = long_context_variant()
+    if shape.seq_len >= 32_768 and shape.kind in ("train", "prefill"):
+        # §Perf-D: q-chunked attention — peak memory O(chunk·T), not
+        # O(T^2); numerics identical (tests)
+        cfg = cfg.replace(attn_q_chunk=1024)
+    return cfg
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               extra_tag: str = "", cfg_override=None,
+               rules_override=None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or config_for(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_override or rules_for(shape, multi_pod, cfg.family)
+    shd.set_rules(rules)
+    shd.set_mesh(mesh)
+    t0 = time.time()
+    try:
+        with mesh:
+            result = _lower_inner(cfg, shape, mesh, rules)
+    finally:
+        shd.set_rules(None)
+        shd.set_mesh(None)
+    result.update({
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": extra_tag, "wall_s": round(time.time() - t0, 1),
+    })
+    return result
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _with_sharding(specs_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs_tree, shardings_tree)
+
+
+def _lower_inner(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    n_dev = mesh.devices.size
+    if shape.kind in ("train", "prefill"):
+        p_spec = S.param_specs(cfg)
+        if rules.fsdp:
+            p_sh = _named(mesh, shd.fsdp_param_pspecs(p_spec, mesh, rules))
+            b_spec = S.train_input_specs(cfg, shape)
+            b_sh = _named(mesh, shd.fsdp_batch_pspecs(rules, b_spec, mesh))
+        else:
+            p_sh = _named(mesh, shd.param_pspecs(p_spec, mesh))
+            b_spec = S.train_input_specs(cfg, shape)
+            b_sh = _named(mesh, shd.batch_pspecs(rules, b_spec, mesh))
+        if shape.kind == "train":
+            o_spec = S.opt_state_specs(cfg, p_spec)
+            if rules.fsdp:
+                o_sh = _named(mesh,
+                              shd.fsdp_param_pspecs(p_spec, mesh, rules))
+            else:
+                o_sh = _named(mesh,
+                              shd.opt_state_pspecs(rules, p_spec, mesh))
+            o_sh = {"step": NamedSharding(mesh, P()), "m": o_sh, "v": o_sh}
+            ocfg = opt.AdamWConfig()
+            fn = steps.make_train_step(cfg, ocfg)
+            jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+            args = (_with_sharding(p_spec, p_sh),
+                    _with_sharding(o_spec, o_sh),
+                    _with_sharding(b_spec, b_sh))
+        else:
+            fn = steps.make_prefill(cfg)
+            jfn = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            args = (_with_sharding(p_spec, p_sh),
+                    _with_sharding(b_spec, b_sh))
+    else:
+        p_spec = S.param_specs(cfg)
+        p_sh = _named(mesh, shd.param_pspecs(p_spec, mesh))
+        c_spec = S.cache_specs(cfg, shape)
+        c_sh = _named(mesh, shd.cache_pspecs(rules, c_spec, mesh))
+        b_spec = S.decode_input_specs(cfg, shape)
+        b_sh = _named(mesh, shd.batch_pspecs(rules, b_spec, mesh))
+        fn = steps.make_serve_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                      out_shardings=(None, c_sh), donate_argnums=(1,))
+        args = (_with_sharding(p_spec, p_sh),
+                _with_sharding(c_spec, c_sh),
+                _with_sharding(b_spec, b_sh))
+
+    lowered = jfn.lower(*args)
+    compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_stats[k] = int(getattr(mem, k, 0) or 0)
+    # live bytes per device ~ args + temp - aliased (donated) buffers
+    per_dev = mem_stats["argument_size_in_bytes"] + \
+        mem_stats["temp_size_in_bytes"] - mem_stats["alias_size_in_bytes"]
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca_flops = float(ca.get("flops", 0.0))
+    ca_bytes = float(ca.get("bytes accessed", 0.0))
+
+    # trip-count-aware static profile (cost_analysis counts while bodies
+    # once -> ~num_layers× undercount for scan-over-layers models)
+    from repro.launch import hlo_analysis as H
+    hlo = compiled.as_text()
+    prof = H.analyze(hlo)
+    flops_dev = prof["flops"]
+    bytes_dev = prof["hbm_bytes"]
+    coll = {**prof["collective_bytes"],
+            **{f"n_{k}": v for k, v in prof["collective_counts"].items()}}
+
+    # roofline terms (seconds; per-chip program against v5e peaks)
+    compute_t = flops_dev / PEAK_FLOPS_BF16
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll["total"] / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+
+    return {
+        "devices": int(n_dev),
+        "memory": mem_stats,
+        "per_device_bytes": int(per_dev),
+        "fits_16GB": bool(per_dev < 16e9),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "xla_cost_analysis": {"flops": ca_flops, "bytes": ca_bytes,
+                              "note": "while bodies counted once"},
+        "collectives": coll,
+        "roofline": {**terms, "dominant": dominant,
+                     "model_flops_global": mf,
+                     "useful_flops_ratio": useful},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        pairs = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multipod]
+
+    failures = 0
+    for arch, shape in pairs:
+        reason = pair_skip_reason(arch, shape)
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip-existing] {tag}")
+                continue
+            if reason:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "skipped": reason}, f, indent=1)
+                print(f"[skipped] {tag}: {reason}")
+                continue
+            try:
+                res = lower_pair(arch, shape, mp)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                r = res["roofline"]
+                print(f"[ok] {tag}: dom={r['dominant']} "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"mem={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s "
+                      f"bytes/dev={res['per_device_bytes']/1e9:.2f}GB "
+                      f"wall={res['wall_s']}s", flush=True)
+            except Exception as e:
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

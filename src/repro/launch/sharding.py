@@ -1,0 +1,357 @@
+"""Sharding rules: map model/optimizer/batch pytrees to PartitionSpecs.
+
+Megatron-style baseline:
+  * attention heads + FFN hidden + experts + vocab -> ``model`` axis
+  * batch -> ``("pod", "data")`` (or ``data`` single-pod)
+  * residual activations -> sequence dim over ``model`` (Megatron
+    sequence parallelism; the memory-term lever in §Perf)
+  * long_500k decode: KV cache sequence over ``data`` (batch=1)
+
+jit argument shardings must divide evenly, so every rule is a
+*candidate list*: the first spec whose sharded dims divide the array
+(given the mesh axis sizes) wins; otherwise the next candidate (e.g.
+MoE expert-parallel falls back to TP-within-expert when E % 16 != 0;
+KV caches with few GQA heads fall back to sequence sharding), and
+finally replication.
+
+The active rules are process-global trace-time constants, set by the
+launcher before tracing; model code calls ``constrain_residual`` which
+no-ops when no rules are active (unit tests / single-device runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class Rules:
+    multi_pod: bool = False
+    zero_sharded_opt: bool = False     # ZeRO: optimizer state over data
+    seq_parallel: bool = True          # activations: seq over model
+    shard_cache_seq: bool = False      # long_500k: cache seq over data
+    fsdp: bool = False                 # dense-train FSDP-style sharding
+
+    @property
+    def dp(self):
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+_ACTIVE: Optional[Rules] = None
+
+
+def set_rules(rules: Optional[Rules]):
+    global _ACTIVE
+    _ACTIVE = rules
+
+
+def active() -> Optional[Rules]:
+    return _ACTIVE
+
+
+def constrain_residual(x):
+    """[B, T, d] residual-stream constraint (sequence parallelism)."""
+    r = _ACTIVE
+    if r is None:
+        return x
+    if r.fsdp:
+        ax = fsdp_axes(r)
+        n = 1
+        for a in ax:
+            n *= _axis_len(a)
+        if x.shape[0] % n == 0:
+            return jax.lax.with_sharding_constraint(x, P(ax, None, None))
+        return jax.lax.with_sharding_constraint(x, P(r.dp, None, None))
+    if r.seq_parallel and x.shape[1] % _axis_len("model") == 0 and \
+            x.shape[0] % _dp_len(r) == 0:
+        return jax.lax.with_sharding_constraint(x, P(r.dp, "model", None))
+    return jax.lax.with_sharding_constraint(x, P(r.dp, None, None))
+
+
+def _axis_len(name: str) -> int:
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _dp_len(r: Rules) -> int:
+    n = 1
+    for a in r.dp:
+        n *= _axis_len(a)
+    return n
+
+
+_CURRENT_MESH = None
+
+
+def set_mesh(mesh):
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+# ---------------------------------------------------------------------------
+# Divisibility-aware candidate selection
+# ---------------------------------------------------------------------------
+
+def _entry_size(mesh_sizes, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh_sizes.get(e, 1)
+        return n
+    return mesh_sizes.get(entry, 1)
+
+
+def _spec_fits(spec: P, shape, mesh_sizes) -> bool:
+    if len(spec) > len(shape):
+        return False
+    # right-align
+    pads = len(shape) - len(spec)
+    for i, entry in enumerate(spec):
+        n = _entry_size(mesh_sizes, entry)
+        if n > 1 and shape[pads + i] % n != 0:
+            return False
+    return True
+
+
+def _align(spec: P, ndim: int) -> P:
+    pads = ndim - len(spec)
+    if pads < 0:
+        return P()
+    return P(*([None] * pads + list(spec)))
+
+
+def pick_spec(candidates: Sequence[P], shape, mesh) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for c in candidates:
+        if _spec_fits(c, shape, sizes):
+            return _align(c, len(shape))
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (path-pattern rules -> candidate lists)
+# ---------------------------------------------------------------------------
+
+def _moe_or_dense_up(leaf):
+    if leaf.ndim >= 4:   # [L, E, d, f]: expert-parallel, else TP-in-expert
+        return [P("model", None, None), P(None, None, "model")]
+    return [P(None, "model"), P("model", None)]
+
+
+def _moe_or_dense_down(leaf):
+    if leaf.ndim >= 4:
+        return [P("model", None, None), P(None, "model", None)]
+    return [P("model", None), P(None, "model")]
+
+
+_PARAM_RULES = [
+    (r"mlp/w_(gate|up)$", _moe_or_dense_up),
+    (r"mlp/w_down$", _moe_or_dense_down),
+    (r"(attn|cross)/w[qkv]$", lambda _: [P(None, "model"),
+                                         P("model", None)]),
+    (r"(attn|cross)/wo$", lambda _: [P("model", None), P(None, "model")]),
+    (r"(attn|cross)/b[qkv]$", lambda _: [P("model")]),
+    (r"(mlp|ffn|shared)/w_(up|gate)$", lambda _: [P(None, "model"),
+                                                  P("model", None)]),
+    (r"(mlp|ffn|shared)/w_down$", lambda _: [P("model", None),
+                                             P(None, "model")]),
+    (r"(^|/)embed$", lambda _: [P("model", None), P(None, "model")]),
+    (r"(^|/)unembed$", lambda _: [P(None, "model"), P("model", None)]),
+    (r"in_proj$", lambda _: [P(None, "model"), P("model", None)]),
+    (r"out_proj$", lambda _: [P("model", None), P(None, "model")]),
+    (r"conv_[wb]$", lambda _: [P()]),
+    (r"w_(up|gate_up)$", lambda _: [P(None, "model"), P("model", None)]),
+    (r"w(q|k|v|i|f)$", lambda _: [P(None, "model"), P("model", None)]),
+    (r"w_down$", lambda _: [P("model", None), P(None, "model")]),
+    (r"w_zifo$", lambda _: [P(None, "model"), P("model", None)]),
+    (r"r_zifo$", lambda _: [P(None, "model", None, None),
+                            P(None, None, "model", None)]),
+    (r"projector/w[12]$", lambda _: [P(None, "model"), P("model", None)]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(path, leaf, mesh) -> P:
+    s = _path_str(path)
+    for pat, builder in _PARAM_RULES:
+        if re.search(pat, s):
+            return pick_spec(builder(leaf), leaf.shape, mesh)
+    return P()  # replicated (norms, scalars, biases)
+
+
+def param_pspecs(params, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(p, l, mesh), params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(rules: Rules, batch, mesh):
+    dp = rules.dp
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        if name.endswith("pos3"):
+            return pick_spec([P(None, dp, None)], leaf.shape, mesh)
+        cands = {
+            1: [P(dp)],
+            2: [P(dp, None)],
+            3: [P(dp, None, None)],
+        }.get(leaf.ndim, [P()])
+        return pick_spec(cands, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_pspecs(rules: Rules, cache, mesh):
+    dp = rules.dp
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        if name.endswith("bits"):
+            cands = [P(None, dp)] if rules.shard_cache_seq else \
+                [P(dp, None)]
+            return pick_spec(cands, leaf.shape, mesh)
+        if re.search(r"(^|/)(k|v|cross_k|cross_v|attn_k|attn_v)$", name):
+            # [L|G, B, T, Hkv, hd]
+            if rules.shard_cache_seq:
+                cands = [P(None, None, dp, "model", None),
+                         P(None, None, dp, None, None)]
+            else:
+                cands = [P(None, dp, None, "model", None),
+                         P(None, dp, "model", None, None),
+                         P(None, dp, None, None, None)]
+            return pick_spec(cands, leaf.shape, mesh)
+        if name.endswith("ssm"):    # [L, B, nh, hd, ds]
+            b = None if rules.shard_cache_seq else dp
+            cands = [P(None, b, "model", None, None),
+                     P(None, b, None, None, None)]
+            return pick_spec(cands, leaf.shape, mesh)
+        if name.endswith("conv"):   # [L, B, k, C]
+            b = None if rules.shard_cache_seq else dp
+            cands = [P(None, b, None, "model"), P(None, b, None, None)]
+            return pick_spec(cands, leaf.shape, mesh)
+        if leaf.ndim >= 2:
+            b = None if rules.shard_cache_seq else dp
+            cands = [P(None, b, *([None] * (leaf.ndim - 2)))]
+            return pick_spec(cands, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def opt_state_pspecs(rules: Rules, params, mesh):
+    """Adam m/v shard like params; ZeRO additionally shards the leading
+    (layer-stacked) dim over data where divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(path, leaf):
+        base = param_pspec(path, leaf, mesh)
+        if not rules.zero_sharded_opt or leaf.ndim < 2:
+            return base
+        entries = list(base) + [None] * (leaf.ndim - len(base))
+        # insert the dp axes at the first replicated dim that divides
+        for i, e in enumerate(entries):
+            if e is not None:
+                continue
+            cand = list(entries)
+            cand[i] = rules.dp
+            z = P(*cand)
+            if _spec_fits(z, leaf.shape, sizes):
+                return z
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def constrain(x, *entries):
+    """Generic divisibility-checked sharding constraint for model code.
+    ``entries`` align to x's dims; "dp" resolves to the active data
+    axes. No-op when no rules/mesh are active (unit tests)."""
+    r = _ACTIVE
+    mesh = _CURRENT_MESH
+    if r is None or mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resolved = tuple(r.dp if e == "dp" else e for e in entries)
+    spec = P(*resolved)
+    if _spec_fits(spec, x.shape, sizes):
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# FSDP-style rules (beyond-paper §Perf iteration for dense-arch training):
+# weights shard their widest dim over ALL non-pod axes; the batch shards
+# over the same axes, so GSPMD resolves the contraction conflict by
+# all-gathering each layer's weights (O(params) comm per step) instead
+# of Megatron-TP's O(activations)-per-layer traffic.
+# ---------------------------------------------------------------------------
+
+def fsdp_axes(rules: Rules):
+    return ("data", "model")
+
+
+def fsdp_param_pspec(path, leaf, mesh, rules: Rules) -> P:
+    ax = fsdp_axes(rules)
+    if leaf.ndim == 0:
+        return P()
+    # try dims widest-first
+    order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+    for i in order:
+        spec = [None] * leaf.ndim
+        spec[i] = ax
+        p = P(*spec)
+        if _spec_fits(p, leaf.shape,
+                      dict(zip(mesh.axis_names, mesh.devices.shape))):
+            return p
+    return P()
+
+
+def fsdp_param_pspecs(params, mesh, rules: Rules):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: fsdp_param_pspec(p, l, mesh, rules), params)
+
+
+def fsdp_batch_pspecs(rules: Rules, batch, mesh):
+    ax = fsdp_axes(rules)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        if name.endswith("pos3"):
+            return pick_spec([P(None, ax, None), P(None, ("data",), None)],
+                             leaf.shape, mesh)
+        cands = {
+            1: [P(ax), P(("data",))],
+            2: [P(ax, None), P(("data",), None)],
+            3: [P(ax, None, None), P(("data",), None, None)],
+        }.get(leaf.ndim, [P()])
+        return pick_spec(cands, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)

@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct input specs for every (arch × input shape) pair —
+the dry-run lowers against these; nothing is ever allocated.
+
+train/prefill: tokens/labels/positions [B, T] (+ modality-stub
+embeddings for audio/vlm archs, + BAM bits/M-RoPE for vlm).
+decode: one new token [B, 1] + the KV/state cache of seq_len.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, T = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, T), jnp.int32),
+        "labels": _sds((B, T), jnp.int32),
+        "positions": _sds((B, T), jnp.int32),
+    }
+    if cfg.family == "audio":
+        batch["encoder_embeds"] = _sds(
+            (B, cfg.encdec.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        batch["bits"] = _sds((B, T), jnp.uint32)
+        batch["inputs_embeds"] = _sds((B, T, cfg.d_model), cfg.dtype)
+        batch["embed_mask"] = _sds((B, T), jnp.bool_)
+        batch["pos3"] = _sds((3, B, T), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B = shape.global_batch
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "positions": _sds((B, 1), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, T = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, B, T, jnp.dtype(cfg.dtype)))
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_specs(cfg: ModelConfig, params_spec, ocfg=None):
+    from repro.optim import optimizer as opt
+    ocfg = ocfg or opt.AdamWConfig()
+    return jax.eval_shape(lambda: opt.init(ocfg, jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), params_spec)))
+
+
+def concrete_batch(cfg: ModelConfig, seq: int, batch: int, seed: int = 0,
+                   kind: str = "train"):
+    """Small concrete batch matching the spec layout (smoke tests /
+    examples)."""
+    rng = np.random.default_rng(seed)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "positions": jnp.broadcast_to(
+            jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq)),
+    }
+    if cfg.family == "audio":
+        out["encoder_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.encdec.encoder_seq, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        from repro.models import vlm as V
+        n_img = cfg.mm.num_patches
+        assert seq > n_img + 2, (seq, n_img)
+        grid = (1, int(np.sqrt(n_img)), int(np.sqrt(n_img)))
+        patch = jnp.asarray(rng.normal(0, 1, (batch, n_img, cfg.d_model)),
+                            jnp.dtype(cfg.dtype))
+        merged = V.make_vlm_batch(out["tokens"], patch,
+                                  img_start=(seq - n_img) // 2, grid=grid,
+                                  d_model=cfg.d_model)
+        merged["labels"] = out["labels"]
+        out = merged
+    return out

@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 300 --seq 128 --batch 4 [--reduced] [--mllm valm] \
+        [--ckpt-dir ckpts/run0] [--log-every 10]
+
+Two modes:
+  * LM mode (``--arch``): any registered architecture; synthetic LM
+    stream (repro.data.synthetic.TextLMDataset).
+  * MLLM mode (``--mllm vlm|alm|valm``): the Cornstarch path — frozen
+    encoders + LLM, trainable projectors, multimodal batches; the
+    frozen mask drives both stop_gradient and optimizer masking.
+
+Runs on whatever devices exist (data-parallel over the host mesh when
+more than one); this is the driver the smoke/e2e examples call into.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.data.synthetic import MultimodalDataset, TextLMDataset
+from repro.models import api
+from repro.optim import optimizer as opt
+from repro.training import steps
+
+
+def train_lm(args) -> dict:
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.vocab:
+        cfg = cfg.replace(vocab_size=args.vocab)
+    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
+                                                        or 1),
+                           total_steps=args.steps)
+    state = opt.init(ocfg, params)
+    step_fn = jax.jit(steps.make_train_step(cfg, ocfg), donate_argnums=(0, 1))
+    ds = iter(TextLMDataset(cfg.vocab_size, args.seq, args.batch,
+                            seed=args.seed))
+    losses = []
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), ds):
+        params, state, m = step_fn(params, state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(m["loss"])
+            losses.append(loss)
+            print(f"step {i:5d} loss {loss:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, {"params": params, "opt": state},
+                  step=args.steps)
+        print(f"saved checkpoint to {args.ckpt_dir}")
+    return {"params": n_params, "first_loss": losses[0],
+            "last_loss": losses[-1]}
+
+
+def train_mllm(args) -> dict:
+    from repro.models.mllm import build_paper_mllm
+    mllm = build_paper_mllm(args.mllm, reduced=args.reduced,
+                            text_len=args.seq)
+    params = mllm.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
+                                                        or 1),
+                           total_steps=args.steps)
+    fmask = mllm.frozen_mask(params)
+    state = opt.init(ocfg, params, fmask)
+    step_fn, _ = steps.make_mllm_train_step(mllm, ocfg)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    ds = iter(MultimodalDataset(
+        vocab_size=mllm.llm_cfg.vocab_size, text_len=args.seq,
+        batch_size=args.batch,
+        encoder_dims={n: e.cfg.d_model for n, e in mllm.encoders.items()},
+        encoder_tokens={n: e.num_tokens for n, e in mllm.encoders.items()},
+        modality_ids={n: e.modality_id for n, e in mllm.encoders.items()},
+        seed=args.seed))
+    losses = []
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), ds):
+        params, state, m = step_fn(params, state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(m["loss"])
+            losses.append(loss)
+            print(f"step {i:5d} loss {loss:.4f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if args.ckpt_dir:
+        frozen_paths = {"llm"} | {
+            f"encoders/{n}/module" for n in mllm.encoders}
+        ckpt.save(args.ckpt_dir, params, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt_dir} "
+              f"(frozen paths: {sorted(frozen_paths)})")
+    return {"params": n_params, "first_loss": losses[0],
+            "last_loss": losses[-1]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--mllm", default=None, choices=[None, "vlm", "alm",
+                                                     "valm"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+    assert (args.arch is None) != (args.mllm is None), \
+        "pass exactly one of --arch / --mllm"
+    res = train_mllm(args) if args.mllm else train_lm(args)
+    print(f"done: {res['params']:,} params, "
+          f"loss {res['first_loss']:.3f} -> {res['last_loss']:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

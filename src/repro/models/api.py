@@ -1,0 +1,40 @@
+"""Uniform model API — dispatch on ``cfg.family``.
+
+    init(key, cfg)                           -> params
+    forward(params, cfg, batch)              -> (logits, aux)
+    init_cache(cfg, batch_size, max_len)     -> cache
+    decode_step(params, cfg, cache, batch)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, moe, transformer, vlm, whisper, xlstm
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": xlstm,
+    "hybrid": mamba2,
+    "audio": whisper,
+    "vlm": vlm,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init(key, cfg: ModelConfig):
+    return module_for(cfg).init(key, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return module_for(cfg).forward(params, cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    return module_for(cfg).init_cache(cfg, batch_size, max_len, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    return module_for(cfg).decode_step(params, cfg, cache, batch)

@@ -1,0 +1,378 @@
+"""Mamba2 (SSD) blocks + the zamba2-style hybrid backbone.
+
+Mamba2 (arXiv:2405.21060 semantics; zamba2 arXiv:2411.15242 structure):
+state-space recurrence per head
+
+    h_t = a_t · h_{t-1} + dt_t · (B_t ⊗ x_t)        a_t = exp(-exp(A_log)·dt_t)
+    y_t = C_t · h_t + D · x_t
+
+Training uses the chunkwise-parallel SSD algorithm: quadratic
+attention-like compute *within* chunks of length ``cfg.ssm.chunk`` and a
+``lax.scan`` carrying the inter-chunk state — the standard TPU-friendly
+formulation (MXU matmuls inside chunks, O(T) state flow across).
+
+zamba2 hybrid structure: ``num_layers`` Mamba2 blocks; after every
+``cfg.attn_layer_period`` blocks, one **shared** full-attention
+transformer block (single weight set reused at every application —
+zamba2's parameter-sharing trick) is applied. Decode keeps one KV cache
+slot per shared-block *application* plus per-layer SSM/conv states —
+total state is O(L·d·d_state), which is what makes the hybrid legal for
+``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import bam
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.d_inner(cfg.d_model) + 2 * s.d_state
+
+
+def mamba_layer_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * s.d_state + nh   # z, x, B, C, dt
+    return {
+        "ln": L.norm_init(cfg, d, dtype),
+        "in_proj": L.dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, _conv_channels(cfg)))
+                   * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((_conv_channels(cfg),), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),   # a = exp(-exp(A_log)·dt)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_ln": L.norm_init(cfg, di, dtype),
+        "out_proj": L.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def shared_attn_init(key, cfg: ModelConfig, dtype):
+    """The zamba2 shared transformer block (attention + MLP)."""
+    return T._layer_init(key, cfg, dtype)
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_shared, k_out = jax.random.split(key, 4)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": L.stacked_init(
+            lambda k: mamba_layer_init(k, cfg, dtype), k_layers,
+            cfg.num_layers),
+        "final_ln": L.norm_init(cfg, cfg.d_model, dtype),
+    }
+    if cfg.attn_layer_period:
+        params["shared_attn"] = shared_attn_init(k_shared, cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                         dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Core SSD ops
+# ---------------------------------------------------------------------------
+
+def _causal_depthwise_conv(x, w, b):
+    """x: [B,T,C]; w: [k,C] depthwise causal conv; silu activation."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # gather-free formulation: sum of shifted slices (k is tiny, 4)
+    T_ = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + T_, :].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(p, cfg: ModelConfig, x):
+    """Project + conv; returns z, xh [B,T,nh,hd], Bm/Cm [B,T,ds],
+    dt [B,T,nh] (softplus'd), a-decay log [B,T,nh]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _causal_depthwise_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["A_log"]) * dt                     # [B,T,nh] (<=0)
+    xh = xin.reshape(*xin.shape[:-1], nh, s.head_dim)
+    return z, xh, Bm, Cm, dt, log_a
+
+
+def ssd_chunked(xh, Bm, Cm, dt, log_a, chunk: int, h0=None):
+    """Chunkwise-parallel SSD scan.
+
+    xh: [B,T,nh,hd]; Bm/Cm: [B,T,ds]; dt/log_a: [B,T,nh].
+    Returns (y [B,T,nh,hd], h_last [B,nh,hd,ds]).
+    """
+    Bsz, T_, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    c = chunk
+    assert T_ % c == 0, (T_, c)
+    nc = T_ // c
+    f32 = jnp.float32
+
+    xc = xh.reshape(Bsz, nc, c, nh, hd).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, c, ds).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, c, ds).astype(f32)
+    dtc = dt.reshape(Bsz, nc, c, nh)
+    lac = log_a.reshape(Bsz, nc, c, nh)
+    cum = jnp.cumsum(lac, axis=2)                         # [B,nc,c,nh]
+
+    # --- intra-chunk (quadratic within chunk, MXU matmuls) --------------
+    cb = jnp.einsum("bzts,bzis->bzti", Cc, Bc)            # [B,nc,c,c]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]     # [B,nc,t,i,nh]
+    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bztin,bzinh->bztnh", m, xc)
+
+    # --- chunk summary states -------------------------------------------
+    # H_z = sum_i exp(cum_last - cum_i) * dt_i * (B_i ⊗ x_i)
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc        # [B,nc,c,nh]
+    Hz = jnp.einsum("bzin,bzinh,bzis->bznhs", w_end, xc, Bc)
+    Az = jnp.exp(cum[:, :, -1, :])                        # chunk total decay
+
+    # --- inter-chunk scan -------------------------------------------------
+    h_init = jnp.zeros((Bsz, nh, hd, ds), f32) if h0 is None \
+        else h0.astype(f32)
+
+    def step(h, inp):
+        Hz_z, Az_z = inp                                  # [B,nh,hd,ds], [B,nh]
+        h_out = h                                         # state BEFORE chunk
+        h = Az_z[:, :, None, None] * h + Hz_z
+        return h, h_out
+
+    HzS = jnp.moveaxis(Hz, 1, 0)                          # [nc,B,nh,hd,ds]
+    AzS = jnp.moveaxis(Az, 1, 0)                          # [nc,B,nh]
+    h_last, h_prevs = lax.scan(step, h_init, (HzS, AzS))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # [B,nc,nh,hd,ds]
+
+    # y_inter[t] = exp(cum_t) * dt-free C_t · h_prev
+    y_inter = jnp.einsum("bzts,bznhs->bztnh", Cc, h_prevs) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, T_, nh, hd)
+    return y, h_last
+
+
+def ssd_step(xh, Bm, Cm, dt, log_a, h):
+    """Single-token recurrent step. xh: [B,1,nh,hd]; h: [B,nh,hd,ds]."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a[:, 0, :]).astype(f32)               # [B,nh]
+    u = jnp.einsum("bnh,bs,bn->bnhs", xh[:, 0].astype(f32),
+                   Bm[:, 0].astype(f32), dt[:, 0])
+    h = a[:, :, None, None] * h + u
+    y = jnp.einsum("bs,bnhs->bnh", Cm[:, 0].astype(f32), h)
+    return y[:, None], h
+
+
+def mamba_block(p, cfg: ModelConfig, x, *, h0=None, conv_state=None,
+                step: bool = False):
+    """Full Mamba2 block. Training: step=False (chunked scan).
+    Decode: step=True with (h0, conv_state) from the cache.
+    Returns (out, new_h, new_conv_state)."""
+    s = cfg.ssm
+    res = x
+    xn = L.apply_norm(cfg, p["ln"], x)
+
+    if step:
+        # maintain a rolling conv window of the last d_conv inputs
+        d = cfg.d_model
+        di = s.d_inner(d)
+        nh = s.n_heads(d)
+        zxbcdt = xn @ p["in_proj"]
+        z, xin, Bm, Cm, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + s.d_state,
+                     2 * di + 2 * s.d_state], axis=-1)
+        conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)   # [B,1,C]
+        window = jnp.concatenate([conv_state, conv_in], axis=1)  # [B,k,C]
+        new_conv_state = window[:, 1:]
+        wc = p["conv_w"].astype(jnp.float32)
+        conv_out = jnp.sum(window.astype(jnp.float32) * wc[None], axis=1,
+                           keepdims=True)
+        conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+        conv_out = conv_out.astype(x.dtype)
+        xin, Bm, Cm = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        log_a = -jnp.exp(p["A_log"]) * dt
+        xh = xin.reshape(*xin.shape[:-1], nh, s.head_dim)
+        y, h_new = ssd_step(xh, Bm, Cm, dt, log_a, h0)
+    else:
+        z, xh, Bm, Cm, dt, log_a = _ssm_inputs(p, cfg, xn)
+        y, h_new = ssd_chunked(xh, Bm, Cm, dt, log_a, s.chunk, h0)
+        new_conv_state = None
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], -1).astype(x.dtype)       # [B,T,di]
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  p["gate_ln"]["w"])
+    return res + y @ p["out_proj"], h_new, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid backbone (zamba2): groups of mamba layers + shared attention
+# ---------------------------------------------------------------------------
+
+def _group_shape(cfg: ModelConfig):
+    per = cfg.attn_layer_period
+    if not per:
+        return 1, cfg.num_layers
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def hidden(params, cfg: ModelConfig, batch):
+    x = T.embed_tokens(params, cfg, batch)
+    n_groups, per = _group_shape(cfg)
+    stacked = jax.tree.map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["layers"])
+
+    def group_body(x, lp_group):
+        def mamba_step(x, lp):
+            def blk(x):
+                out, _, _ = mamba_block(lp, cfg, x)
+                return out
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            return blk(x), None
+
+        x, _ = lax.scan(mamba_step, x, lp_group)
+        if cfg.attn_layer_period:
+            def attn_blk(x):
+                out, _ = T._block(cfg, params["shared_attn"], x, batch,
+                                  jnp.int32(0), None)
+                return out
+            if cfg.remat:
+                attn_blk = jax.checkpoint(attn_blk)
+            x = attn_blk(x)
+        return x, None
+
+    x, _ = lax.scan(group_body, x, stacked)
+    return L.apply_norm(cfg, params["final_ln"], x), \
+        {"aux_loss": jnp.float32(0.0)}
+
+
+def forward(params, cfg: ModelConfig, batch):
+    h, aux = hidden(params, cfg, batch)
+    return T.unembed(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.n_heads(d)
+    n_groups, per = _group_shape(cfg)
+    c = {
+        "ssm": jnp.zeros((cfg.num_layers, batch, nh, s.head_dim, s.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, s.d_conv - 1,
+                           _conv_channels(cfg)), dtype),
+        "bits": jnp.zeros((batch, max_len), jnp.uint32),
+    }
+    if cfg.attn_layer_period:
+        c["attn_k"] = jnp.zeros(
+            (n_groups, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["attn_v"] = jnp.zeros_like(c["attn_k"])
+    return c
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    B = batch["tokens"].shape[0]
+    x = T.embed_tokens(params, cfg, batch)
+    n_groups, per = _group_shape(cfg)
+    stacked = jax.tree.map(
+        lambda a: a.reshape(n_groups, per, *a.shape[1:]), params["layers"])
+    ssm_g = cache["ssm"].reshape(n_groups, per, *cache["ssm"].shape[1:])
+    conv_g = cache["conv"].reshape(n_groups, per, *cache["conv"].shape[1:])
+
+    cur = batch["positions"][:, 0]
+    idx = cur[0]
+    Tmax = cache["bits"].shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(Tmax, dtype=jnp.int32)[None],
+                              (B, Tmax))
+    q_bits = batch.get("bits")
+    if q_bits is None:
+        q_bits = jnp.full((B, 1), bam.text_token(), jnp.uint32)
+    cache_bits = jnp.where(
+        kv_pos < cur[:, None], cache["bits"],
+        jnp.where(kv_pos == cur[:, None],
+                  jnp.broadcast_to(q_bits, kv_pos.shape), jnp.uint32(0)))
+    mask = bam.allowed_mask(q_bits, cache_bits, batch["positions"],
+                            kv_pos)[:, None]
+
+    def group_body(x, xs):
+        lp_group, ssm_gr, conv_gr, gk, gv = xs
+
+        def mamba_step(x, inner):
+            lp, h0, cs = inner
+            out, h_new, cs_new = mamba_block(lp, cfg, x, h0=h0,
+                                             conv_state=cs, step=True)
+            return out, (h_new, cs_new)
+
+        x, (h_new, cs_new) = lax.scan(mamba_step, x,
+                                      (lp_group, ssm_gr, conv_gr))
+        if cfg.attn_layer_period:
+            store = {}
+
+            def kv_override(k, v):
+                nk, nv = L.cache_update(gk, gv, k, v, idx)
+                store["k"], store["v"] = nk, nv
+                return nk, nv
+
+            p = params["shared_attn"]
+            h = L.apply_norm(cfg, p["ln1"], x)
+            attn_out, _ = L.run_attention(
+                p["attn"], cfg, h, q_pos=batch["positions"], kv_pos=kv_pos,
+                mask=mask, kv_override=kv_override)
+            x = x + attn_out
+            h = L.apply_norm(cfg, p["ln2"], x)
+            out, _ = T._default_ffn(p, h, cfg)
+            x = x + out
+            return x, (h_new, cs_new, store["k"], store["v"])
+        return x, (h_new, cs_new, gk, gv)
+
+    x, (h_all, cs_all, k_all, v_all) = lax.scan(
+        group_body, x,
+        (stacked, ssm_g, conv_g,
+         cache.get("attn_k", jnp.zeros((n_groups, 0))),
+         cache.get("attn_v", jnp.zeros((n_groups, 0)))))
+
+    h = L.apply_norm(cfg, params["final_ln"], x)
+    logits = T.unembed(params, cfg, h)
+    new_bits = cache["bits"].at[jnp.arange(B), cur].set(q_bits[:, 0])
+    new_cache = {
+        "ssm": h_all.reshape(cfg.num_layers, *h_all.shape[2:]),
+        "conv": cs_all.reshape(cfg.num_layers, *cs_all.shape[2:]),
+        "bits": new_bits,
+    }
+    if cfg.attn_layer_period:
+        new_cache["attn_k"] = k_all
+        new_cache["attn_v"] = v_all
+    return logits, new_cache

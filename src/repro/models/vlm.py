@@ -1,0 +1,99 @@
+"""Qwen2-VL language backbone (arXiv:2409.12191) — M-RoPE + merged
+vision tokens.
+
+The ViT/patch-merger frontend is the allowed stub: ``input_specs()``
+provides precomputed patch embeddings ``[B, n_patches, d_model]`` plus an
+image grid (t, h, w). This module builds the merged multimodal batch —
+BAM bitfields (vision tokens bidirectional within the image stream, text
+causal; exactly the paper's "encoder outputs embedded" EE mask) and the
+3-D M-RoPE position ids — then delegates to the dense transformer.
+
+Dynamic resolution: ``make_vlm_batch`` takes per-sample grids; the
+assigned dry-run shapes use a fixed grid, but nothing here assumes it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import bam
+from repro.models import transformer as T
+
+VISION = 1  # modality bit for the vision stream
+
+init = T.init
+init_cache = T.init_cache
+
+
+def mrope_positions(seq_len: int, img_start: int, grid: tuple[int, int, int]):
+    """Build [3, T] (temporal, h, w) position ids for one sample with one
+    image of ``grid`` = (t, h, w) patches starting at ``img_start``.
+    Text positions: all three streams equal (standard RoPE degenerate).
+    Vision positions: temporal/h/w indices within the grid, offset by the
+    text position where the image is embedded."""
+    gt, gh, gw = grid
+    n_img = gt * gh * gw
+    pos = np.zeros((3, seq_len), np.int32)
+    # leading text
+    for k in range(3):
+        pos[k, :img_start] = np.arange(img_start)
+    # image block
+    t_ids = np.repeat(np.arange(gt), gh * gw)
+    h_ids = np.tile(np.repeat(np.arange(gh), gw), gt)
+    w_ids = np.tile(np.arange(gw), gt * gh)
+    pos[0, img_start:img_start + n_img] = img_start + t_ids
+    pos[1, img_start:img_start + n_img] = img_start + h_ids
+    pos[2, img_start:img_start + n_img] = img_start + w_ids
+    # trailing text continues after max used position
+    nxt = img_start + max(gt, gh, gw)
+    tail = seq_len - (img_start + n_img)
+    for k in range(3):
+        pos[k, img_start + n_img:] = nxt + np.arange(tail)
+    return pos
+
+
+def make_vlm_batch(tokens, patch_embeds, img_start: int,
+                   grid: tuple[int, int, int], d_model: int):
+    """tokens: [B,T] (image positions hold a placeholder id);
+    patch_embeds: [B, n_img, d]. Returns a transformer batch with merged
+    embeddings, BAM bits, sequential positions, and M-RoPE pos3."""
+    B, T_ = tokens.shape
+    n_img = int(np.prod(grid))
+    assert patch_embeds.shape[1] == n_img
+
+    seg = [("text", 0, img_start), ("mod", VISION, n_img),
+           ("text", 0, T_ - img_start - n_img)]
+    bits_np, pos_np = bam.build_sample_bits(seg, T_)
+    bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T_))
+    positions = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T_))
+
+    embed_mask_np = np.zeros((T_,), bool)
+    embed_mask_np[img_start:img_start + n_img] = True
+    embed_mask = jnp.broadcast_to(jnp.asarray(embed_mask_np)[None], (B, T_))
+
+    inputs_embeds = jnp.zeros((B, T_, d_model), patch_embeds.dtype)
+    inputs_embeds = jax.lax.dynamic_update_slice(
+        inputs_embeds, patch_embeds, (0, img_start, 0))
+
+    pos3_np = mrope_positions(T_, img_start, grid)
+    pos3 = jnp.broadcast_to(jnp.asarray(pos3_np)[:, None], (3, B, T_))
+
+    return {
+        "tokens": tokens,
+        "positions": positions,
+        "bits": bits,
+        "inputs_embeds": inputs_embeds,
+        "embed_mask": embed_mask,
+        "pos3": pos3,
+    }
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return T.forward(params, cfg, batch)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    return T.decode_step(params, cfg, cache, batch)

@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder audio backbone (arXiv:2212.04356).
+
+The mel-spectrogram + 2×conv frontend is the allowed stub:
+``input_specs()`` feeds precomputed frame embeddings
+``[B, n_frames=1500, d_model]`` directly to the encoder (DESIGN.md §4).
+
+Encoder: bidirectional MHA + gelu MLP, sinusoidal positions, pre-LN.
+Decoder: causal self-attention + cross-attention to encoder states.
+Deviation (documented): the decoder uses sinusoidal positions instead of
+whisper's learned 448-entry table — the assigned decode shapes require
+positions up to 32k.
+
+As an MLLM module this is a natural 2-node execution DAG
+(encoder → decoder), which is exactly what the frozen-aware pipeline
+partitioner (core/pipeline.py) consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import bam
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def sinusoid_pos(pos, d: int):
+    """pos: [B,T] -> [B,T,d] float32 sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.norm_init(cfg, cfg.d_model, dtype),
+        "attn": L.attn_init(ks[0], cfg, dtype),
+        "ln2": L.norm_init(cfg, cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=False),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = _enc_layer_init(ks[0], cfg, dtype)
+    p["ln_cross"] = L.norm_init(cfg, cfg.d_model, dtype)
+    p["cross"] = L.attn_init(ks[1], cfg, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    e = cfg.encdec
+    return {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": L.stacked_init(
+            lambda k: _enc_layer_init(k, cfg, dtype), ks[1],
+            e.num_encoder_layers),
+        "enc_ln": L.norm_init(cfg, cfg.d_model, dtype),
+        "layers": L.stacked_init(
+            lambda k: _dec_layer_init(k, cfg, dtype), ks[2],
+            cfg.num_layers),
+        "final_ln": L.norm_init(cfg, cfg.d_model, dtype),
+    }  # unembed tied (whisper ties)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, T_enc, d] stubbed conv-frontend output."""
+    B, Te, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32)[None], (B, Te))
+    x = frames + sinusoid_pos(pos, cfg.d_model).astype(frames.dtype)
+    full = jnp.ones((B, 1, Te, Te), bool)
+
+    def body(x, lp):
+        def blk(x):
+            h = L.apply_norm(cfg, lp["ln1"], x)
+            a, _ = L.run_attention(lp["attn"], cfg, h, q_pos=pos, mask=full,
+                                   rope=False)
+            x = x + a
+            h = L.apply_norm(cfg, lp["ln2"], x)
+            return x + L.run_mlp(lp["mlp"], h, "gelu")
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_ln"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_block(cfg, lp, x, enc_out, batch, self_mask, enc_pos):
+    q_pos = batch["positions"]
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    a, _ = L.run_attention(lp["attn"], cfg, h, q_pos=q_pos, mask=self_mask,
+                           rope=False)
+    x = x + a
+    h = L.apply_norm(cfg, lp["ln_cross"], x)
+    B, Te = enc_pos.shape
+    cross_mask = jnp.ones((B, 1, h.shape[1], Te), bool)
+    a, _ = L.run_attention(lp["cross"], cfg, h, x_kv=enc_out, q_pos=q_pos,
+                           kv_pos=enc_pos, mask=cross_mask, rope=False)
+    x = x + a
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    x = x + L.run_mlp(lp["mlp"], h, "gelu")
+    if cfg.seq_shard_activations:
+        from repro.launch import sharding as shd
+        x = shd.constrain_residual(x)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: encoder_embeds [B,Te,d]; tokens/positions [B,T]; optional
+    bits (BAM over decoder tokens)."""
+    enc_out = encode(params, cfg, batch["encoder_embeds"])
+    B, Te = enc_out.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32)[None], (B, Te))
+    q_pos = batch["positions"]
+    x = params["embed"][batch["tokens"]]
+    x = x + sinusoid_pos(q_pos, cfg.d_model).astype(x.dtype)
+    bits = batch.get("bits")
+    if bits is not None:
+        self_mask = bam.allowed_mask(bits, bits, q_pos, q_pos)[:, None]
+    else:
+        self_mask = L.causal_mask(q_pos, q_pos)
+
+    def body(x, lp):
+        def blk(x):
+            return _dec_block(cfg, lp, x, enc_out, batch, self_mask, enc_pos)
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    h = L.apply_norm(cfg, params["final_ln"], x)
+    return h @ params["embed"].T, {"aux_loss": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    e = cfg.encdec
+    c = L.init_kv_cache(cfg, batch, max_len, dtype)
+    c["bits"] = jnp.zeros((batch, max_len), jnp.uint32)
+    shape = (cfg.num_layers, batch, e.encoder_seq, cfg.num_kv_heads,
+             cfg.head_dim)
+    c["cross_k"] = jnp.zeros(shape, dtype)
+    c["cross_v"] = jnp.zeros(shape, dtype)
+    return c
+
+
+def prefill_cross(params, cfg: ModelConfig, cache, frames):
+    """Run the encoder once and fill the per-layer cross K/V cache."""
+    enc_out = encode(params, cfg, frames)
+
+    def body(_, lp):
+        B, Te = enc_out.shape[:2]
+        k = (enc_out @ lp["cross"]["wk"]).reshape(
+            B, Te, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ lp["cross"]["wv"]).reshape(
+            B, Te, cfg.num_kv_heads, cfg.head_dim)
+        return None, (k, v)
+
+    _, (ck, cv) = lax.scan(body, None, params["layers"])
+    cache = dict(cache)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    B = batch["tokens"].shape[0]
+    Tmax = cache["k"].shape[2]
+    cur = batch["positions"][:, 0]
+    idx = cur[0]
+    kv_pos = jnp.broadcast_to(jnp.arange(Tmax, dtype=jnp.int32)[None],
+                              (B, Tmax))
+    self_mask = (kv_pos <= cur[:, None])[:, None, None, :]
+    x = params["embed"][batch["tokens"]]
+    x = x + sinusoid_pos(batch["positions"], cfg.d_model).astype(x.dtype)
+    Te = cache["cross_k"].shape[2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32)[None], (B, Te))
+    cross_mask = jnp.ones((B, 1, 1, Te), bool)
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        store = {}
+
+        def kv_override(k, v):
+            nk, nv = L.cache_update(ck, cv, k, v, idx)
+            store["k"], store["v"] = nk, nv
+            return nk, nv
+
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        a, _ = L.run_attention(lp["attn"], cfg, h, q_pos=batch["positions"],
+                               kv_pos=kv_pos, mask=self_mask, rope=False,
+                               kv_override=kv_override)
+        x = x + a
+        h = L.apply_norm(cfg, lp["ln_cross"], x)
+        a, _ = L.run_attention(lp["cross"], cfg, h, q_pos=batch["positions"],
+                               kv_pos=enc_pos, mask=cross_mask, rope=False,
+                               kv_override=lambda k, v: (xk, xv))
+        x = x + a
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        x = x + L.run_mlp(lp["mlp"], h, "gelu")
+        return x, (store["k"], store["v"])
+
+    x, (nk, nv) = lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = L.apply_norm(cfg, params["final_ln"], x)
+    logits = h @ params["embed"].T
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    return logits, new_cache

@@ -1,0 +1,447 @@
+"""xLSTM backbone (arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+* **mLSTM** — matrix-memory LSTM with exponential gating. Training uses
+  the stabilized *parallel (quadratic) form* (attention-like, MXU
+  friendly); decode uses the recurrent form with per-head state
+  (C [hd,hd], n [hd], m scalar). Attention-free ⇒ legal for long_500k.
+* **sLSTM** — scalar-memory recurrent LSTM with exponential gating and
+  block-diagonal recurrent weights; training runs a ``lax.scan`` over
+  time (sequential by construction — the paper's own formulation).
+
+Block layout follows the paper's residual pre-norm structure; the
+``cfg.xlstm.slstm_at`` indices select sLSTM blocks, the rest are mLSTM
+(xLSTM[a:b] notation). d_ff == 0 in the assigned config: blocks carry
+their own up/down projections instead of a separate FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d = cfg.d_model
+    dm = int(d * x.proj_factor_m)
+    nh = cfg.num_heads
+    return d, dm, nh, dm // nh
+
+
+def mlstm_layer_init(key, cfg: ModelConfig, dtype):
+    d, dm, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": L.norm_init(cfg, d, dtype),
+        "w_up": L.dense_init(ks[0], d, dm, dtype),
+        "w_gate_up": L.dense_init(ks[1], d, dm, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.xlstm.conv_kernel, dm))
+                   * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((dm,), dtype),
+        "wq": L.dense_init(ks[3], dm, dm, dtype),
+        "wk": L.dense_init(ks[4], dm, dm, dtype),
+        "wv": L.dense_init(ks[5], dm, dm, dtype),
+        "wi": L.dense_init(ks[6], dm, nh, dtype),
+        "wf": L.dense_init(ks[7], dm, nh, dtype),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),  # open forget gates
+        "head_ln": L.norm_init(cfg, dm, dtype),
+        "w_down": L.dense_init(ks[8], dm, d, dtype),
+    }
+
+
+def slstm_layer_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    x = cfg.xlstm
+    dff = int(d * x.proj_factor_s)
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": L.norm_init(cfg, d, dtype),
+        "conv_w": (jax.random.normal(ks[0], (x.conv_kernel, d)) * 0.02
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        # input weights for z,i,f,o
+        "w_zifo": L.dense_init(ks[1], d, 4 * d, dtype),
+        # block-diagonal recurrent weights per head [4, nh, hd, hd]
+        "r_zifo": (jax.random.normal(ks[2], (4, nh, hd, hd)) * 0.02
+                   ).astype(dtype),
+        "b_zifo": jnp.zeros((4, d), jnp.float32),
+        "group_ln": L.norm_init(cfg, d, dtype),
+        "ffn": L.mlp_init(ks[3], d, dff, dtype, gated=True),
+        "ffn_ln": L.norm_init(cfg, d, dtype),
+    }
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    x = cfg.xlstm
+    k_embed, k_m, k_s, k_out = jax.random.split(key, 4)
+    n_s = len(x.slstm_at)
+    n_m = cfg.num_layers - n_s
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "mlstm_layers": L.stacked_init(
+            lambda k: mlstm_layer_init(k, cfg, dtype), k_m, max(n_m, 1)),
+        "final_ln": L.norm_init(cfg, cfg.d_model, dtype),
+    }
+    if n_s:
+        params["slstm_layers"] = L.stacked_init(
+            lambda k: slstm_layer_init(k, cfg, dtype), k_s, n_s)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                         dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvif(p, cfg: ModelConfig, xn):
+    d, dm, nh, hd = _dims(cfg)
+    xu = xn @ p["w_up"]
+    xg = xn @ p["w_gate_up"]                      # output-gate branch
+    from repro.models.mamba2 import _causal_depthwise_conv
+    xc = _causal_depthwise_conv(xu, p["conv_w"], p["conv_b"])
+    B_, T_ = xn.shape[:2]
+
+    def heads(a):
+        return a.reshape(B_, T_, nh, hd)
+    q = heads(xc @ p["wq"]) * (hd ** -0.5)
+    k = heads(xc @ p["wk"])
+    v = heads(xu @ p["wv"])
+    log_i = (xc @ p["wi"]).astype(jnp.float32)                   # [B,T,nh]
+    log_f = jax.nn.log_sigmoid(
+        (xc @ p["wf"]).astype(jnp.float32) + p["f_bias"])        # <= 0
+    o_gate = jax.nn.sigmoid(xg.astype(jnp.float32))
+    return q, k, v, log_i, log_f, o_gate, xu
+
+
+def mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel mLSTM (paper eq. 19-27). All [B,T,nh,*]."""
+    f32 = jnp.float32
+    fcum = jnp.cumsum(log_f, axis=1)                              # [B,T,nh]
+    # dtilde[t,s] = fcum[t] - fcum[s] + log_i[s], s <= t
+    dt_mat = fcum[:, :, None, :] - fcum[:, None, :, :] + \
+        log_i[:, None, :, :]                                      # [B,t,s,nh]
+    T_ = q.shape[1]
+    tri = jnp.tril(jnp.ones((T_, T_), bool))[None, :, :, None]
+    dt_mat = jnp.where(tri, dt_mat, -jnp.inf)
+    m = jnp.max(dt_mat, axis=2, keepdims=True)                    # [B,t,1,nh]
+    D = jnp.exp(dt_mat - m)                                       # stabilized
+    S = jnp.einsum("btnh,bsnh->btsn", q.astype(f32), k.astype(f32)) * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(S, axis=2, keepdims=True)),
+                       jnp.exp(-m))
+    S = S / norm
+    return jnp.einsum("btsn,bsnh->btnh", S, v.astype(f32))
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """Chunkwise-parallel stabilized mLSTM: quadratic *within* chunks,
+    recurrent (C, n, m) state across chunks. Matches ``mlstm_parallel``
+    (the oracle) to float tolerance; O(T·c) memory instead of O(T^2).
+
+    Returns (h [B,T,nh,hd], (C, n, m) final state)."""
+    f32 = jnp.float32
+    B_, T_, nh, hd = q.shape
+    c = min(chunk, T_)
+    assert T_ % c == 0, (T_, c)
+    nc = T_ // c
+    NEG = jnp.asarray(-1e30, f32)
+
+    def chunkify(a):
+        return jnp.moveaxis(a.reshape(B_, nc, c, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = chunkify(q.astype(f32)), chunkify(k.astype(f32)), \
+        chunkify(v.astype(f32))
+    lic, lfc = chunkify(log_i), chunkify(log_f)               # [nc,B,c,nh]
+
+    if state is None:
+        C0 = jnp.zeros((B_, nh, hd, hd), f32)
+        n0 = jnp.zeros((B_, nh, hd), f32)
+        m0 = jnp.full((B_, nh), NEG, f32)
+    else:
+        C0, n0, m0 = state
+
+    tril = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+
+    def step(carry, xs):
+        C, n, m = carry
+        qz, kz, vz, li, lf = xs                               # [B,c,...]
+        fcum = jnp.cumsum(lf, axis=1)                         # [B,c,nh]
+        # local matrix exponents dt[t,s] = fcum_t - fcum_s + li_s
+        dt_mat = fcum[:, :, None, :] - fcum[:, None, :, :] + li[:, None]
+        dt_mat = jnp.where(tril, dt_mat, NEG)
+        local_max = jnp.max(dt_mat, axis=2)                   # [B,c,nh]
+        m_inter = m[:, None, :] + fcum                        # [B,c,nh]
+        m_t = jnp.maximum(m_inter, local_max)
+        # intra contributions
+        S = jnp.einsum("btnh,bsnh->btsn", qz, kz) * \
+            jnp.exp(dt_mat - m_t[:, :, None, :])
+        h_num = jnp.einsum("btsn,bsnd->btnd", S, vz)
+        # normalizer uses plain decay weights (no q·k)
+        w_dec = jnp.exp(dt_mat - m_t[:, :, None, :])          # [B,t,s,nh]
+        n_vec = jnp.einsum("btsn,bsnh->btnh", w_dec, kz)
+        # inter contributions from carried state
+        scale = jnp.exp(m_inter - m_t)[..., None]             # [B,c,nh,1]
+        h_num = h_num + scale * jnp.einsum("btnh,bnhd->btnd", qz, C)
+        n_vec = n_vec + scale * n[:, None]
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n_vec * qz, axis=-1, keepdims=True)),
+            jnp.exp(-m_t)[..., None])
+        h = h_num / denom
+        # state update to end of chunk
+        w_end = fcum[:, -1:, :] - fcum + li                   # [B,c,nh]
+        m_end_inter = m + fcum[:, -1]
+        m_new = jnp.maximum(m_end_inter, jnp.max(w_end, axis=1))
+        we = jnp.exp(w_end - m_new[:, None, :])
+        C = jnp.exp(m_end_inter - m_new)[:, :, None, None] * C + \
+            jnp.einsum("bsn,bsnh,bsnd->bnhd", we, kz, vz)
+        n = jnp.exp(m_end_inter - m_new)[:, :, None] * n + \
+            jnp.einsum("bsn,bsnh->bnh", we, kz)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, nc * c, nh, hd)
+    return h, (C, n, m)
+
+
+def mlstm_block(p, cfg: ModelConfig, x):
+    d, dm, nh, hd = _dims(cfg)
+    xn = L.apply_norm(cfg, p["ln"], x)
+    q, k, v, log_i, log_f, o_gate, xu = _mlstm_qkvif(p, cfg, xn)
+    T_ = q.shape[1]
+    if T_ % cfg.xlstm.chunk == 0 and T_ > cfg.xlstm.chunk:
+        h, _ = mlstm_chunked(q, k, v, log_i, log_f, cfg.xlstm.chunk)
+    else:
+        h = mlstm_parallel(q, k, v, log_i, log_f)
+    h = h.reshape(*h.shape[:-2], dm)
+    h = L.rmsnorm(h.astype(x.dtype), p["head_ln"]["w"])
+    h = (h.astype(jnp.float32) * o_gate).astype(x.dtype)
+    return x + h @ p["w_down"]
+
+
+def mlstm_step(p, cfg: ModelConfig, x, state):
+    """Recurrent decode step. state: (C [B,nh,hd,hd], n [B,nh,hd],
+    m [B,nh], conv [B,k-1,dm])."""
+    d, dm, nh, hd = _dims(cfg)
+    C, n, m, conv = state
+    f32 = jnp.float32
+    xn = L.apply_norm(cfg, p["ln"], x)
+    xu = xn @ p["w_up"]                                           # [B,1,dm]
+    xg = xn @ p["w_gate_up"]
+    window = jnp.concatenate([conv, xu], axis=1)                  # [B,k,dm]
+    new_conv = window[:, 1:]
+    wc = p["conv_w"].astype(f32)
+    xc = jnp.sum(window.astype(f32) * wc[None], axis=1, keepdims=True)
+    xc = jax.nn.silu(xc + p["conv_b"].astype(f32)).astype(x.dtype)
+
+    def heads(a):
+        return a.reshape(a.shape[0], nh, hd)
+    q = heads((xc @ p["wq"])[:, 0]) * (hd ** -0.5)
+    k = heads((xc @ p["wk"])[:, 0])
+    v = heads((xu @ p["wv"])[:, 0])
+    log_i = ((xc @ p["wi"])[:, 0]).astype(f32)                    # [B,nh]
+    log_f = jax.nn.log_sigmoid(
+        ((xc @ p["wf"])[:, 0]).astype(f32) + p["f_bias"])
+    m_new = jnp.maximum(log_f + m, log_i)
+    a = jnp.exp(log_f + m - m_new)[:, :, None]
+    b = jnp.exp(log_i - m_new)[:, :, None]
+    C = a[..., None] * C + b[..., None] * jnp.einsum(
+        "bnh,bnd->bnhd", k.astype(f32), v.astype(f32))
+    n = a * n + b * k.astype(f32)
+    num = jnp.einsum("bnh,bnhd->bnd", q.astype(f32), C)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * q.astype(f32), axis=-1,
+                                      keepdims=True)), jnp.exp(-m_new)[..., None])
+    h = (num / den).reshape(x.shape[0], 1, dm)
+    h = L.rmsnorm(h.astype(x.dtype), p["head_ln"]["w"])
+    o_gate = jax.nn.sigmoid(xg.astype(f32))
+    h = (h.astype(f32) * o_gate).astype(x.dtype)
+    return x + h @ p["w_down"], (C, n, m_new, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(p, cfg: ModelConfig, zifo_x, state):
+    """One timestep. zifo_x: [B, 4d] pre-computed input contributions.
+    state: (c, n, h, m) each [B, d] (m: [B, nh])."""
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    f32 = jnp.float32
+    c, n, h, m = state
+    hh = h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bnh,gnhd->gbnd", hh.astype(f32),
+                     p["r_zifo"].astype(f32)).reshape(4, -1, d)
+    pre = zifo_x.reshape(-1, 4, d).transpose(1, 0, 2).astype(f32) + \
+        rec + p["b_zifo"][:, None, :]
+    z_p, i_p, f_p, o_p = pre
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    log_i = i_p.reshape(-1, nh, hd)
+    log_f = jax.nn.log_sigmoid(f_p).reshape(-1, nh, hd)
+    m_new = jnp.maximum(log_f + m[..., None],
+                        log_i).max(-1)                            # [B,nh]
+    a = jnp.exp(log_f + m[..., None] - m_new[..., None]).reshape(-1, d)
+    b = jnp.exp(log_i - m_new[..., None]).reshape(-1, d)
+    c = a * c + b * z
+    n = a * n + b
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new)
+
+
+def slstm_block(p, cfg: ModelConfig, x, state=None, step: bool = False,
+                conv_state=None):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    B_ = x.shape[0]
+    f32 = jnp.float32
+    xn = L.apply_norm(cfg, p["ln"], x)
+    if step:
+        window = jnp.concatenate([conv_state, xn], axis=1)
+        new_conv = window[:, 1:]
+        wc = p["conv_w"].astype(f32)
+        xc = jnp.sum(window.astype(f32) * wc[None], axis=1, keepdims=True)
+        xc = jax.nn.silu(xc + p["conv_b"].astype(f32)).astype(x.dtype)
+    else:
+        from repro.models.mamba2 import _causal_depthwise_conv
+        xc = _causal_depthwise_conv(xn, p["conv_w"], p["conv_b"])
+        new_conv = None
+    zifo = xc @ p["w_zifo"]                                       # [B,T,4d]
+
+    if step:
+        assert state is not None
+        state = _slstm_cell(p, cfg, zifo[:, 0], state)
+        h = state[2][:, None]
+    else:
+        init = (jnp.zeros((B_, d), f32), jnp.zeros((B_, d), f32),
+                jnp.zeros((B_, d), f32), jnp.full((B_, nh), -jnp.inf, f32))
+
+        def scan_fn(s, z_t):
+            s = _slstm_cell(p, cfg, z_t, s)
+            return s, s[2]
+
+        state, hs = lax.scan(scan_fn, init, jnp.moveaxis(zifo, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)                                # [B,T,d]
+    h = L.apply_norm(cfg, p["group_ln"], h.astype(x.dtype))
+    x = x + h
+    hn = L.apply_norm(cfg, p["ffn_ln"], x)
+    x = x + L.run_mlp(p["ffn"], hn, "gelu")
+    return x, state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+def _layer_plan(cfg: ModelConfig):
+    """Returns list of ("m"|"s", index-within-kind) per layer."""
+    s_at = set(cfg.xlstm.slstm_at)
+    plan, mi, si = [], 0, 0
+    for i in range(cfg.num_layers):
+        if i in s_at:
+            plan.append(("s", si))
+            si += 1
+        else:
+            plan.append(("m", mi))
+            mi += 1
+    return plan
+
+
+def hidden(params, cfg: ModelConfig, batch):
+    x = T.embed_tokens(params, cfg, batch)
+    # xLSTM mixes two block types -> per-layer python loop (12 layers;
+    # the sLSTM time-scan dominates compile anyway)
+    for kind, j in _layer_plan(cfg):
+        if kind == "m":
+            lp = jax.tree.map(lambda a: a[j], params["mlstm_layers"])
+
+            def blk(x, lp=lp):
+                return mlstm_block(lp, cfg, x)
+        else:
+            lp = jax.tree.map(lambda a: a[j], params["slstm_layers"])
+
+            def blk(x, lp=lp):
+                out, _, _ = slstm_block(lp, cfg, x)
+                return out
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        x = blk(x)
+        # pin the residual stream so GSPMD keeps the batch sharded
+        # through the chunked-scan reshapes (475 GB/dev replication
+        # otherwise under FSDP — EXPERIMENTS.md §Perf-D note)
+        from repro.launch import sharding as shd
+        x = shd.constrain_residual(x)
+    return L.apply_norm(cfg, params["final_ln"], x), \
+        {"aux_loss": jnp.float32(0.0)}
+
+
+def forward(params, cfg: ModelConfig, batch):
+    h, aux = hidden(params, cfg, batch)
+    return T.unembed(params, cfg, h), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    d, dm, nh, hd = _dims(cfg)
+    n_s = len(cfg.xlstm.slstm_at)
+    n_m = cfg.num_layers - n_s
+    k = cfg.xlstm.conv_kernel
+    c = {
+        "m_C": jnp.zeros((n_m, batch, nh, hd, hd), jnp.float32),
+        "m_n": jnp.zeros((n_m, batch, nh, hd), jnp.float32),
+        "m_m": jnp.zeros((n_m, batch, nh), jnp.float32),
+        "m_conv": jnp.zeros((n_m, batch, k - 1, dm), dtype),
+    }
+    if n_s:
+        c.update({
+            "s_c": jnp.zeros((n_s, batch, d), jnp.float32),
+            "s_n": jnp.zeros((n_s, batch, d), jnp.float32),
+            "s_h": jnp.zeros((n_s, batch, d), jnp.float32),
+            "s_m": jnp.full((n_s, batch, cfg.num_heads), -jnp.inf,
+                            jnp.float32),
+            "s_conv": jnp.zeros((n_s, batch, k - 1, d), dtype),
+        })
+    return c
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    x = T.embed_tokens(params, cfg, batch)
+    new_cache = jax.tree.map(lambda a: a, cache)
+    for kind, j in _layer_plan(cfg):
+        if kind == "m":
+            lp = jax.tree.map(lambda a: a[j], params["mlstm_layers"])
+            state = (cache["m_C"][j], cache["m_n"][j], cache["m_m"][j],
+                     cache["m_conv"][j])
+            x, (C, n, m, conv) = mlstm_step(lp, cfg, x, state)
+            new_cache["m_C"] = new_cache["m_C"].at[j].set(C)
+            new_cache["m_n"] = new_cache["m_n"].at[j].set(n)
+            new_cache["m_m"] = new_cache["m_m"].at[j].set(m)
+            new_cache["m_conv"] = new_cache["m_conv"].at[j].set(conv)
+        else:
+            lp = jax.tree.map(lambda a: a[j], params["slstm_layers"])
+            state = (cache["s_c"][j], cache["s_n"][j], cache["s_h"][j],
+                     cache["s_m"][j])
+            x, state, conv = slstm_block(lp, cfg, x, state=state, step=True,
+                                         conv_state=cache["s_conv"][j])
+            c_, n_, h_, m_ = state
+            new_cache["s_c"] = new_cache["s_c"].at[j].set(c_)
+            new_cache["s_n"] = new_cache["s_n"].at[j].set(n_)
+            new_cache["s_h"] = new_cache["s_h"].at[j].set(h_)
+            new_cache["s_m"] = new_cache["s_m"].at[j].set(m_)
+            new_cache["s_conv"] = new_cache["s_conv"].at[j].set(conv)
+    h = L.apply_norm(cfg, params["final_ln"], x)
+    return T.unembed(params, cfg, h), new_cache

@@ -1,0 +1,179 @@
+"""Training / serving step builders.
+
+``make_train_step(cfg)`` -> jit-able ``step(params, opt_state, batch)``
+for any registered architecture; cross-entropy is computed **chunked
+over the sequence** (``cfg.loss_chunk``) so the full [B,T,V] logits
+tensor never materializes — essential for 150k-256k vocabularies at 4k
+sequence (the memory-roofline lever recorded in EXPERIMENTS.md §Perf).
+
+``make_serve_step(cfg)`` -> one-token decode against a KV/state cache
+(the ``decode_32k`` / ``long_500k`` dry-run entry point).
+
+``make_mllm_train_step(mllm)`` -> the Cornstarch path: frozen-aware
+MLLM training (encoders + projectors + LLM with frozen masking).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models import transformer as T
+from repro.optim import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, valid=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if valid is None:
+        return jnp.mean(nll)
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def chunked_cross_entropy(h, params, cfg: ModelConfig, labels, valid=None,
+                          chunk: Optional[int] = None):
+    """h: [B,T,d] final hidden; computes CE scanning seq chunks so only
+    [B,chunk,V] logits exist at a time (recomputed in backward)."""
+    B, T_, d = h.shape
+    c = chunk or cfg.loss_chunk
+    if not c or T_ % c != 0:
+        logits = T.unembed(params, cfg, h)
+        return cross_entropy(logits, labels, valid)
+    nc = T_ // c
+    hs = jnp.moveaxis(h.reshape(B, nc, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    vs = None if valid is None else \
+        jnp.moveaxis(valid.reshape(B, nc, c), 1, 0)
+
+    def body(carry, xs):
+        if vs is None:
+            hc, lc = xs
+            vc = jnp.ones(lc.shape, jnp.float32)
+        else:
+            hc, lc, vc = xs
+            vc = vc.astype(jnp.float32)
+
+        def f(hc):
+            logits = T.unembed(params, cfg, hc).astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return jnp.sum((lse - ll) * vc), jnp.sum(vc)
+        s, n = jax.checkpoint(f)(hc)
+        tot, cnt = carry
+        return (tot + s, cnt + n), None
+
+    xs = (hs, ls) if vs is None else (hs, ls, vs)
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# LM train step (all assigned architectures)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig):
+    mod = api.module_for(cfg)
+
+    def loss_fn(params, batch):
+        valid = batch.get("valid")
+        if cfg.loss_chunk and hasattr(mod, "hidden"):
+            h, aux = mod.hidden(params, cfg, batch)
+            loss = chunked_cross_entropy(h, params, cfg, batch["labels"],
+                                         valid)
+        else:
+            logits, aux = mod.forward(params, cfg, batch)
+            loss = cross_entropy(logits, batch["labels"], valid)
+        return loss + aux.get("aux_loss", 0.0), \
+            {"ce": loss, **{k: v for k, v in aux.items()}}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, ocfg: Optional[opt.AdamWConfig] = None,
+                    frozen_mask=None):
+    ocfg = ocfg or opt.AdamWConfig()
+    loss_fn = make_loss_fn(cfg)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = opt.update(ocfg, grads, opt_state, params,
+                                           frozen_mask)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serve step (decode shapes)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, cache = api.decode_step(params, cfg, cache, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill = full forward returning logits of the last position
+    (prefill_32k dry-run entry point)."""
+    mod = api.module_for(cfg)
+
+    def prefill(params, batch):
+        if cfg.loss_chunk and hasattr(mod, "hidden"):
+            h, _ = mod.hidden(params, cfg, batch)
+            return T.unembed(params, cfg, h[:, -1:, :])
+        logits, _ = mod.forward(params, cfg, batch)
+        return logits[:, -1:, :]
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# Cornstarch MLLM train step (frozen-aware)
+# ---------------------------------------------------------------------------
+
+def make_mllm_train_step(mllm, ocfg: Optional[opt.AdamWConfig] = None):
+    ocfg = ocfg or opt.AdamWConfig()
+
+    def loss_fn(params, batch):
+        (logits, aux), merged = mllm.forward(params, batch)
+        # loss over text positions only (modality tokens carry no labels)
+        is_text = (merged["bits"] != 0) & (~merged["embed_mask"])
+        B, Tm = merged["tokens"].shape
+        labels = jnp.zeros((B, Tm), jnp.int32)
+        # labels provided for the original text token stream; scatter
+        # them to text slots
+        txt_idx = jnp.cumsum(is_text.astype(jnp.int32), axis=1) - 1
+        lab_src = batch["labels"]
+        gathered = jnp.take_along_axis(
+            lab_src, jnp.clip(txt_idx, 0, lab_src.shape[1] - 1), axis=1)
+        labels = jnp.where(is_text, gathered, 0)
+        loss = cross_entropy(logits, labels, valid=is_text)
+        return loss + aux.get("aux_loss", 0.0), {"ce": loss}
+
+    def step(params, opt_state, batch):
+        # frozen mask is a *static* structure of python bools derived
+        # from the module flags (not traced values)
+        frozen_mask = mllm.frozen_mask(params)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = opt.update(ocfg, grads, opt_state, params,
+                                           frozen_mask)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return step, loss_fn

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src on the path (tests also work without PYTHONPATH=src)
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+# NOTE: never set --xla_force_host_platform_device_count here — smoke
+# tests must see the single real device; multi-device tests spawn
+# subprocesses (tests/helpers.py).

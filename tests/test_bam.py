@@ -1,0 +1,125 @@
+"""BAM (Bitfield Attention Mask) unit + property tests.
+
+Property tests are seed-parametrized (no hypothesis wheel in the
+container — same invariants, explicit seed sweep)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bam
+
+
+def brute_force_mask(bits, pos, window=0):
+    """O(T^2) python reimplementation of the documented semantics."""
+    T = len(bits)
+    m = np.zeros((T, T), bool)
+    for i in range(T):
+        for j in range(T):
+            bi, bj = int(bits[i]), int(bits[j])
+            if bi == 0 or bj == 0:
+                continue
+            if (bi >> bam.INST_SHIFT) & 0xFF != (bj >> bam.INST_SHIFT) & 0xFF:
+                continue
+            mj = (bj >> bam.MOD_SHIFT) & 0x7F
+            mi = (bi >> bam.MOD_SHIFT) & 0x7F
+            if not ((bi & 0xFFFF) >> mj) & 1:
+                continue
+            if mi == bam.TEXT:
+                ok = pos[j] <= pos[i]
+                if window:
+                    ok = ok and (pos[i] - pos[j]) < window
+            else:
+                ok = mj == mi
+            m[i, j] = ok
+    return m
+
+
+def random_segments(rng, total):
+    segs, used = [], 0
+    doc = 0
+    while used < total - 4:
+        kind = rng.choice(["text", "mod", "newdoc"], p=[0.5, 0.4, 0.1])
+        if kind == "newdoc" and used > 0:
+            segs.append(("newdoc", 0, 0))
+            continue
+        n = int(rng.integers(1, min(8, total - used) + 1))
+        if kind == "mod":
+            segs.append(("mod", int(rng.integers(1, 5)), n))
+        else:
+            segs.append(("text", 0, n))
+        used += n
+    return segs
+
+
+def test_encode_fields():
+    b = bam.encode(0b101, 3, 7)
+    assert bam.attends_set(np.uint32(b)) == 0b101
+    assert bam.own_modality(np.uint32(b)) == 3
+    assert bam.instance_id(np.uint32(b)) == 7
+
+
+def test_text_and_modality_tokens():
+    t = bam.text_token([1, 2])
+    assert bam.attends_set(np.uint32(t)) == 0b111
+    assert bam.own_modality(np.uint32(t)) == bam.TEXT
+    m = bam.modality_token(2, instance=3)
+    assert bam.attends_set(np.uint32(m)) == 0b100
+    assert bam.own_modality(np.uint32(m)) == 2
+    assert bam.instance_id(np.uint32(m)) == 3
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("window", [0, 5])
+def test_allowed_mask_matches_bruteforce(seed, window):
+    rng = np.random.default_rng(seed)
+    T = 48
+    bits, pos = bam.build_sample_bits(random_segments(rng, T), T)
+    got = np.asarray(bam.allowed_mask(
+        jnp.asarray(bits)[None], jnp.asarray(bits)[None],
+        jnp.asarray(pos)[None], jnp.asarray(pos)[None], window))[0]
+    want = brute_force_mask(bits, pos, window)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_token_workload_is_mask_rowsum(seed):
+    rng = np.random.default_rng(seed + 100)
+    T = 64
+    bits, pos = bam.build_sample_bits(random_segments(rng, T), T)
+    W = bam.token_workload(bits, pos)
+    rows = brute_force_mask(bits, pos).sum(axis=1)
+    np.testing.assert_allclose(W, rows)
+
+
+def test_causal_bits_degenerates_to_causal():
+    bits = np.asarray(bam.causal_bits(1, 16))[0]
+    pos = np.arange(16)
+    m = brute_force_mask(bits, pos)
+    np.testing.assert_array_equal(m, np.tril(np.ones((16, 16), bool)))
+
+
+def test_padding_never_attends():
+    bits = np.zeros(8, np.uint32)
+    bits[:4] = bam.text_token()
+    pos = np.arange(8)
+    m = np.asarray(bam.allowed_mask(
+        jnp.asarray(bits)[None], jnp.asarray(bits)[None],
+        jnp.asarray(pos)[None], jnp.asarray(pos)[None]))[0]
+    assert not m[4:, :].any() and not m[:, 4:].any()
+
+
+def test_cross_document_isolation():
+    segs = [("text", 0, 4), ("newdoc", 0, 0), ("text", 0, 4)]
+    bits, pos = bam.build_sample_bits(segs, 8)
+    m = brute_force_mask(bits, pos)
+    assert not m[4:, :4].any() and not m[:4, 4:].any()
+
+
+def test_block_workload_sums_tokens():
+    segs = [("text", 0, 16)]
+    bits, pos = bam.build_sample_bits(segs, 16)
+    W = bam.token_workload(bits, pos)
+    Wb = bam.block_workload(bits, pos, 4)
+    assert len(Wb) == 4
+    np.testing.assert_allclose(Wb, W.reshape(4, 4).sum(1))

@@ -1,0 +1,85 @@
+"""Token-distribution planner tests (paper §4.3.2 / Appendix A)."""
+import numpy as np
+import pytest
+
+from repro.core import bam, distribution as dist
+
+
+def rand_W(seed, n=64, lo=1.0, hi=20.0):
+    return np.random.default_rng(seed).uniform(lo, hi, size=n)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("method", ["zigzag", "ring", "lpt", "random"])
+def test_plans_partition_all_blocks(seed, method):
+    W = rand_W(seed)
+    plan = dist.PLANNERS[method](W, 8)
+    # completeness + disjointness
+    seen = np.concatenate(plan.per_rank_blocks)
+    assert sorted(seen) == list(range(len(W)))
+    # loads consistent
+    for g, blocks in enumerate(plan.per_rank_blocks):
+        np.testing.assert_allclose(plan.loads[g], W[blocks].sum())
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_lpt_respects_graham_bound(seed):
+    W = rand_W(seed, n=100)
+    plan = dist.lpt(W, 8)
+    assert plan.makespan <= dist.graham_bound(W, 8) + 1e-9
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ilp_is_optimal_and_lpt_close(seed):
+    W = rand_W(seed, n=12)
+    opt = dist.ilp(W, 3)
+    greedy = dist.lpt(W, 3)
+    assert opt.makespan <= greedy.makespan + 1e-9
+    # LPT's 4/3 - 1/(3m) approximation guarantee
+    assert greedy.makespan <= opt.makespan * (4 / 3) + 1e-9
+
+
+def test_zigzag_balances_causal():
+    """Paper Fig. 4a: zigzag is perfectly balanced for causal masks."""
+    T, G, bs = 128, 4, 1
+    bits, pos = bam.build_sample_bits([("text", 0, T)], T)
+    W = bam.block_workload(bits, pos, bs)
+    z = dist.zigzag(W, G, bs)
+    assert z.imbalance < 1.02
+
+
+@pytest.mark.parametrize("mode", ["ee", "mp"])
+def test_lpt_beats_zigzag_on_multimodal(mode):
+    """Paper Fig. 4b / Table 4: zigzag degrades on EE/MP masks; LPT
+    stays balanced."""
+    from repro.data.synthetic import random_multimodal_bits
+    rng_imb = {"zigzag": [], "lpt": [], "random": []}
+    for seed in range(5):
+        bits, pos = random_multimodal_bits(1024, mode, seed=seed)
+        W = bam.block_workload(bits, pos, 16)
+        for m in rng_imb:
+            plan = dist.PLANNERS[m](W, 8) if m != "random" else \
+                dist.random_plan(W, 8, seed=seed)
+            rng_imb[m].append(plan.imbalance)
+    assert np.mean(rng_imb["lpt"]) <= np.mean(rng_imb["zigzag"]) + 1e-9
+    assert np.mean(rng_imb["lpt"]) < 1.1
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_random_close_to_lpt_for_large_T(seed):
+    """Paper §5.3: for T >> G^2 random distribution variance approaches
+    the greedy one (Chernoff)."""
+    from repro.data.synthetic import random_multimodal_bits
+    bits, pos = random_multimodal_bits(8192, "ee", seed=seed)
+    W = bam.block_workload(bits, pos, 8)
+    r = dist.random_plan(W, 4, seed=seed)
+    l = dist.lpt(W, 4)
+    assert r.imbalance < l.imbalance * 1.25 + 0.05
+
+
+def test_plan_tokens_end_to_end():
+    bits, pos = bam.build_sample_bits(
+        [("text", 0, 32), ("mod", 1, 16), ("text", 0, 16)], 64)
+    plan = dist.plan_tokens(bits, pos, 4, block_size=8, method="lpt")
+    assert plan.num_ranks == 4
+    assert sum(len(b) for b in plan.per_rank_blocks) == 8

@@ -1,0 +1,143 @@
+"""Pallas BAM flash-attention kernel vs pure-jnp oracle: shape / dtype /
+mask-mode sweeps in interpret mode (kernel body executed on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bam
+from repro.kernels.ops import bam_attention
+from repro.kernels.ref import bam_attention_ref
+
+
+def make_inputs(seed, B, T, H, Hkv, hd, dtype, segs=None):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, T, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, hd), dtype)
+    segs = segs or [("text", 0, T // 4), ("mod", 1, T // 4),
+                    ("text", 0, T // 4), ("mod", 2, T // 8),
+                    ("text", 0, T - 7 * (T // 8))]
+    bits_np, pos_np = bam.build_sample_bits(segs, T)
+    bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T))
+    pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T))
+    return q, k, v, bits, pos
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("shape", [(1, 32, 2, 2, 16), (2, 48, 4, 2, 32),
+                                   (1, 64, 8, 2, 64)])
+def test_kernel_matches_oracle_shapes(seed, shape):
+    B, T, H, Hkv, hd = shape
+    q, k, v, bits, pos = make_inputs(seed, B, T, H, Hkv, hd, jnp.float32)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    q, k, v, bits, pos = make_inputs(0, 1, 32, 4, 4, 32, dtype)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (8, 32), (32, 8), (16, 48)])
+def test_kernel_block_shapes(bq, bk):
+    q, k, v, bits, pos = make_inputs(1, 1, 96, 2, 1, 16, jnp.float32)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_unpadded_lengths():
+    """T not a multiple of the block size (ops.py pads with bits=0)."""
+    q, k, v, bits, pos = make_inputs(2, 2, 41, 2, 2, 16, jnp.float32)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_softcap_window():
+    q, k, v, bits, pos = make_inputs(3, 1, 32, 2, 2, 16, jnp.float32)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos, softcap=30.0,
+                            window=7)
+    out = bam_attention(q, k, v, bits, bits, pos, pos, softcap=30.0,
+                        window=7, impl="bam_interpret", block_q=16,
+                        block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_packed_documents():
+    segs = [("text", 0, 8), ("mod", 1, 8), ("text", 0, 8),
+            ("newdoc", 0, 0), ("text", 0, 8), ("mod", 2, 8),
+            ("text", 0, 8)]
+    q, k, v, bits, pos = make_inputs(4, 1, 48, 2, 2, 16, jnp.float32,
+                                     segs=segs)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_gqa_no_repeat():
+    """GQA handled by BlockSpec index_map (no materialized repeat)."""
+    q, k, v, bits, pos = make_inputs(5, 1, 32, 8, 2, 16, jnp.float32)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_gradients_match():
+    q, k, v, bits, pos = make_inputs(6, 1, 32, 2, 2, 16, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(bam_attention(q, k, v, bits, bits, pos, pos,
+                                     impl="bam_interpret", block_q=16,
+                                     block_k=16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(bam_attention_ref(q, k, v, bits, bits, pos,
+                                         pos) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_block_skip_equivalence():
+    """Block sparsity must be a pure optimization (no numeric change)."""
+    from repro.kernels.bam_attention import bam_flash_attention
+    q, k, v, bits, pos = make_inputs(7, 1, 64, 2, 2, 16, jnp.float32)
+    a = bam_flash_attention(q, k, v, bits, bits, pos, pos, block_q=16,
+                            block_k=16, block_skip=True, interpret=True)
+    b = bam_flash_attention(q, k, v, bits, bits, pos, pos, block_q=16,
+                            block_k=16, block_skip=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_xla_impl_matches_ref():
+    q, k, v, bits, pos = make_inputs(8, 2, 40, 4, 2, 16, jnp.float32)
+    out = bam_attention(q, k, v, bits, bits, pos, pos, impl="xla")
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0)

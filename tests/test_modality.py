@@ -1,0 +1,154 @@
+"""MultimodalModule / ModalityModule composition tests: execution DAG,
+merge policy, frozen masking, callbacks (paper §3.2, Listing 1/2)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bam
+from repro.core.modality import (ModalityModule, MultimodalModule,
+                                 MultimodalParallelSpec, ParallelSpec)
+from repro.models.mllm import build_paper_mllm
+from repro.optim import optimizer as opt
+from repro.training import steps
+
+
+@pytest.fixture(scope="module")
+def valm():
+    return build_paper_mllm("valm", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def valm_params(valm):
+    return valm.init(jax.random.PRNGKey(0))
+
+
+def make_batch(valm, seed=0, B=2, Tt=64):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "text_tokens": jnp.asarray(
+            rng.integers(0, valm.llm_cfg.vocab_size, (B, Tt)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, valm.llm_cfg.vocab_size, (B, Tt)), jnp.int32),
+    }
+    for name, enc in valm.encoders.items():
+        batch[f"{name}_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, enc.num_tokens, enc.cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+def test_execution_dag_no_false_deps(valm):
+    g = valm.execution_graph()
+    assert not g.has_edge("vision", "audio")
+    assert not g.has_edge("audio", "vision")
+    assert g.has_edge("vision", "llm") and g.has_edge("audio", "llm")
+    gens = valm.independent_sets()
+    assert gens[0] == ["audio", "vision"]   # parallel-executable antichain
+    assert gens[1] == ["llm"]
+
+
+def test_merge_layout_and_bits(valm, valm_params):
+    batch = make_batch(valm)
+    (_, _), merged = valm.forward(valm_params, batch)
+    B, Tm = merged["tokens"].shape
+    assert Tm == valm.merged_length(64)
+    bits = np.asarray(merged["bits"][0])
+    # modality ids present exactly num_tokens times each
+    mods = (bits >> bam.MOD_SHIFT) & 0x7F
+    for name, enc in valm.encoders.items():
+        assert (mods == enc.modality_id).sum() == enc.num_tokens
+    # embed_mask marks exactly the modality positions
+    emask = np.asarray(merged["embed_mask"][0])
+    np.testing.assert_array_equal(emask, mods != bam.TEXT)
+    # text tokens preserved in order
+    toks = np.asarray(merged["tokens"][0])[mods == bam.TEXT]
+    np.testing.assert_array_equal(toks, np.asarray(batch["text_tokens"][0]))
+
+
+def test_frozen_mask_matches_flags(valm, valm_params):
+    mask = valm.frozen_mask(valm_params)
+    assert all(jax.tree.leaves(mask["llm"]))
+    assert all(jax.tree.leaves(mask["encoders"]["vision"]["module"]))
+    assert not any(jax.tree.leaves(mask["encoders"]["vision"]["projector"]))
+
+
+def test_frozen_grads_exactly_zero(valm, valm_params):
+    batch = make_batch(valm, seed=3)
+    _, loss_fn = steps.make_mllm_train_step(valm)
+    grads = jax.grad(lambda p: loss_fn(p, batch)[0])(valm_params)
+    enc_g = jax.tree.leaves(grads["encoders"]["vision"]["module"])
+    assert max(float(jnp.abs(g).max()) for g in enc_g) == 0.0
+    llm_g = jax.tree.leaves(grads["llm"])
+    assert max(float(jnp.abs(g).max()) for g in llm_g) == 0.0
+    proj_g = jax.tree.leaves(grads["encoders"]["vision"]["projector"])
+    assert max(float(jnp.abs(g).max()) for g in proj_g) > 0.0
+
+
+def test_train_step_updates_only_trainable(valm, valm_params):
+    batch = make_batch(valm, seed=4)
+    step, _ = steps.make_mllm_train_step(
+        valm, opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    fmask = valm.frozen_mask(valm_params)
+    state = opt.init(opt.AdamWConfig(), valm_params, fmask)
+    p2, _, metrics = jax.jit(step)(valm_params, state, batch)
+    # frozen llm unchanged bit-for-bit
+    for a, b in zip(jax.tree.leaves(p2["llm"]),
+                    jax.tree.leaves(valm_params["llm"])):
+        assert float(jnp.abs(a - b).max()) == 0.0
+    # projector moved
+    moved = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(p2["encoders"]["vision"]["projector"]),
+        jax.tree.leaves(valm_params["encoders"]["vision"]["projector"])))
+    assert moved > 0.0
+    # frozen leaves carry no optimizer memory
+    frozen_m = jax.tree.leaves(state["m"]["llm"])
+    assert all(x.size == 0 for x in frozen_m)
+
+
+def test_callbacks_call_order():
+    calls = []
+    enc_cfg = build_paper_mllm("vlm", reduced=True).encoders["vision"].cfg
+
+    def cb_pre(inputs):
+        calls.append("pre")
+        return inputs
+
+    def cb_post_mod(inputs, out):
+        calls.append("post_mod")
+        return out
+
+    def cb_post_proj(inputs, out):
+        calls.append("post_proj")
+        return out
+
+    enc = ModalityModule("vision", enc_cfg, modality_id=1, num_tokens=16,
+                         preprocess_callback=cb_pre,
+                         postprocess_module_callback=cb_post_mod,
+                         postprocess_projector_callback=cb_post_proj)
+    params = enc.init(jax.random.PRNGKey(0), llm_d_model=256)
+    enc.forward(params, {"vision_embeds": jnp.ones((1, 16, enc_cfg.d_model))})
+    assert calls == ["pre", "post_mod", "post_proj"]
+
+
+def test_parallel_spec_apply(valm):
+    spec = MultimodalParallelSpec(
+        encoder_specs={"vision": ParallelSpec(pp_size=1),
+                       "audio": ParallelSpec(pp_size=2)},
+        llm_spec=ParallelSpec(pp_size=2), num_microbatches=6)
+    plan = spec.apply(valm, text_len=64)
+    assert plan["devices"] == 5
+    assert len(plan["graph"].stages) == 5
+    assert plan["schedule"]["iteration_time"] > 0
+
+
+def test_modality_id_uniqueness_enforced():
+    cfg = build_paper_mllm("vlm", reduced=True).encoders["vision"].cfg
+    with pytest.raises(AssertionError):
+        MultimodalModule(
+            encoders={
+                "a": ModalityModule("a", cfg, modality_id=1, num_tokens=4),
+                "b": ModalityModule("b", cfg, modality_id=1, num_tokens=4),
+            },
+            llm_cfg=build_paper_mllm("vlm", reduced=True).llm_cfg)

@@ -1,0 +1,139 @@
+"""Frozen-status-aware pipeline partitioner + 1F1B simulator tests
+(paper §4.2, Algorithm 1, Table 3 mechanics)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline as pp
+
+
+def test_bwd_factor_rule():
+    """The paper's T_bwd rule (§4.2)."""
+    frozen_head = pp.ModuleProfile("enc", np.ones(4), frozen=True)
+    frozen_mid = pp.ModuleProfile("llm", np.ones(4), frozen=True,
+                                  trainable_upstream=True)
+    trainable = pp.ModuleProfile("proj", np.ones(4), frozen=False)
+    assert frozen_head.bwd_factor == 0.0
+    assert frozen_mid.bwd_factor == 1.0
+    assert trainable.bwd_factor == 2.0
+    # activation checkpointing: +1 fwd only when grads exist
+    frozen_head.recompute = True
+    frozen_mid.recompute = True
+    trainable.recompute = True
+    assert frozen_head.bwd_factor == 0.0
+    assert frozen_mid.bwd_factor == 2.0
+    assert trainable.bwd_factor == 3.0
+
+
+def test_analyze_chain():
+    enc = pp.ModuleProfile("enc", np.ones(2), frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(2), frozen=True)
+    pp.analyze_chain([enc, llm], projector_trainable=[True, False])
+    assert not enc.trainable_upstream and llm.trainable_upstream
+    # no trainable projector anywhere -> nothing upstream
+    enc2 = pp.ModuleProfile("enc", np.ones(2), frozen=True)
+    llm2 = pp.ModuleProfile("llm", np.ones(2), frozen=True)
+    pp.analyze_chain([enc2, llm2], projector_trainable=[False, False])
+    assert not llm2.trainable_upstream
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_partition_layers_optimal(seed, k):
+    """DP partition == brute-force optimum on small instances."""
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(1, 10, size=8)
+    bounds = pp.partition_layers(costs, k)
+    got = max(costs[a:b].sum() for a, b in bounds)
+    best = np.inf
+    n = len(costs)
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        edges = [0, *cuts, n]
+        m = max(costs[a:b].sum() for a, b in zip(edges, edges[1:]))
+        best = min(best, m)
+    assert abs(got - best) < 1e-9
+    # contiguity + coverage
+    assert bounds[0][0] == 0 and bounds[-1][1] == n
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c
+
+
+def test_simulator_matches_1f1b_closed_form():
+    """Equal stages f, b: 1F1B iteration = (M + S - 1)(f + b)."""
+    for S, M, f, b in [(4, 8, 1.0, 2.0), (2, 4, 3.0, 1.0), (6, 12, 1.0, 1.0)]:
+        g = pp.chain_graph([pp.Stage("m", f, b) for _ in range(S)])
+        sim = pp.simulate_1f1b(g, M)
+        assert abs(sim["iteration_time"] - (M + S - 1) * (f + b)) < 1e-9
+
+
+def test_simulator_single_stage_no_bubble():
+    g = pp.chain_graph([pp.Stage("m", 1.0, 2.0)])
+    sim = pp.simulate_1f1b(g, 8)
+    assert sim["bubble_fraction"] < 1e-9
+
+
+def test_frozen_aware_beats_unaware():
+    """Table 3/Fig 7: frozen-aware partitioning (balancing true fwd+bwd)
+    beats fwd-balanced partitioning when modules are frozen."""
+    enc = pp.ModuleProfile("vision", np.ones(48) * 2.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(32) * 1.5, frozen=True)
+    pp.analyze_chain([enc, llm], projector_trainable=[True, False])
+    aware = pp.simulate_1f1b(
+        pp.build_chain_fused([enc, llm], 8, frozen_aware=True), 24)
+    unaware = pp.simulate_1f1b(
+        pp.build_chain_fused([enc, llm], 8, frozen_aware=False), 24)
+    assert aware["iteration_time"] < unaware["iteration_time"]
+    speedup = unaware["iteration_time"] / aware["iteration_time"]
+    assert speedup > 1.1  # paper reports up to 1.53x
+
+
+def test_modality_parallel_graph_shape():
+    """Fig 6: two encoder chains feeding the LLM chain."""
+    e1 = pp.ModuleProfile("vision", np.ones(4), frozen=True)
+    e2 = pp.ModuleProfile("audio", np.ones(6), frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(8), frozen=True,
+                           trainable_upstream=True)
+    g = pp.build_modality_parallel([e1, e2], llm, [2, 2], 4)
+    assert len(g.stages) == 8
+    preds = g.preds
+    llm_first = 4  # after 2+2 encoder stages
+    assert sorted(preds[llm_first]) == [1, 3]  # both encoder chain tails
+    sim = pp.simulate_1f1b(g, 8)
+    assert sim["iteration_time"] > 0
+
+
+def test_replicated_pays_encoder_cost_everywhere():
+    e = pp.ModuleProfile("vision", np.ones(4) * 2.0, frozen=False)
+    llm = pp.ModuleProfile("llm", np.ones(8), frozen=False)
+    rep = pp.build_replicated([e], llm, 4, frozen_aware=True)
+    colo = pp.build_colocated([e], llm, 2, 4, frozen_aware=True)
+    # every replicated stage carries the full encoder fwd cost
+    assert all(s.fwd >= 8.0 for s in rep.stages)
+    sim_r = pp.simulate_1f1b(rep, 8)
+    sim_c = pp.simulate_1f1b(colo, 8)
+    # paper Fig. 2a: replication is slower end-to-end
+    assert sim_r["iteration_time"] > sim_c["iteration_time"]
+
+
+def test_auto_parallelize_returns_feasible():
+    e1 = pp.ModuleProfile("vision", np.ones(8) * 3.0, frozen=True)
+    e2 = pp.ModuleProfile("audio", np.ones(8) * 1.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(16) * 2.0, frozen=True,
+                           trainable_upstream=True)
+    best = pp.auto_parallelize([e1, e2], llm, total_devices=8,
+                               num_microbatches=8)
+    assert best["devices"] <= 8
+    assert best["llm_stages"] >= 1
+    assert len(best["encoder_stages"]) == 2
+
+
+def test_auto_parallelize_gives_fewer_stages_to_frozen_encoders():
+    """Paper §6.2.2 (VALM-MM): frozen-aware assigns more stages to the
+    LLM (which still has backward) and fewer to frozen encoders."""
+    enc = pp.ModuleProfile("vision", np.ones(32) * 1.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(32) * 1.0, frozen=True,
+                           trainable_upstream=True)
+    best = pp.auto_parallelize([enc], llm, total_devices=8,
+                               num_microbatches=16)
+    assert best["llm_stages"] >= best["encoder_stages"][0]

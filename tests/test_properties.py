@@ -1,0 +1,190 @@
+"""Hypothesis property-based tests on the system's invariants
+(deliverable c): BAM mask semantics, distribution planners, the
+partitioner DP, the attention kernel vs its oracle, chunked scans."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bam, distribution as dist
+from repro.core import pipeline as pp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@st.composite
+def segment_lists(draw, max_total=64):
+    """Random multimodal segment layouts (text/mod/newdoc)."""
+    segs, total = [], 0
+    n = draw(st.integers(2, 8))
+    for i in range(n):
+        kind = draw(st.sampled_from(["text", "mod", "newdoc"]))
+        if kind == "newdoc":
+            if total == 0:
+                kind = "text"
+            else:
+                segs.append(("newdoc", 0, 0))
+                continue
+        length = draw(st.integers(1, max(1, (max_total - total) // 2)))
+        if total + length > max_total:
+            break
+        if kind == "mod":
+            segs.append(("mod", draw(st.integers(1, 4)), length))
+        else:
+            segs.append(("text", 0, length))
+        total += length
+    if total == 0:
+        segs = [("text", 0, 4)]
+        total = 4
+    return segs, max_total
+
+
+@st.composite
+def workloads(draw):
+    n = draw(st.integers(4, 64))
+    return np.array(draw(st.lists(
+        st.floats(0.1, 100.0, allow_nan=False), min_size=n, max_size=n)))
+
+
+# ---------------------------------------------------------------------------
+# BAM invariants
+# ---------------------------------------------------------------------------
+
+@given(segment_lists())
+@settings(**SETTINGS)
+def test_bam_mask_invariants(case):
+    segs, total = case
+    bits, pos = bam.build_sample_bits(segs, total)
+    m = np.asarray(bam.allowed_mask(
+        jnp.asarray(bits)[None], jnp.asarray(bits)[None],
+        jnp.asarray(pos)[None], jnp.asarray(pos)[None]))[0]
+    nonpad = bits != 0
+    # every real token attends itself
+    assert m[np.diag_indices_from(m)][nonpad].all()
+    # padding never attends / is attended
+    assert not m[~nonpad, :].any() and not m[:, ~nonpad].any()
+    # text rows are causal: no attention to strictly-later positions
+    mod = bam.own_modality(bits.astype(np.uint32))
+    text_rows = nonpad & (mod == bam.TEXT)
+    later = pos[None, :] > pos[:, None]
+    assert not (m & later)[text_rows, :].any()
+    # workload == row sums
+    np.testing.assert_allclose(bam.token_workload(bits, pos), m.sum(1))
+    # cross-document isolation
+    inst = bam.instance_id(bits.astype(np.uint32))
+    cross = inst[:, None] != inst[None, :]
+    assert not (m & cross).any()
+
+
+@given(segment_lists())
+@settings(**SETTINGS)
+def test_bam_window_only_restricts(case):
+    segs, total = case
+    bits, pos = bam.build_sample_bits(segs, total)
+    args = (jnp.asarray(bits)[None], jnp.asarray(bits)[None],
+            jnp.asarray(pos)[None], jnp.asarray(pos)[None])
+    full = np.asarray(bam.allowed_mask(*args))
+    win = np.asarray(bam.allowed_mask(*args, 4))
+    assert not (win & ~full).any()   # windowing is monotone
+
+
+# ---------------------------------------------------------------------------
+# Distribution planners
+# ---------------------------------------------------------------------------
+
+@given(workloads(), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_planner_partition_properties(W, G):
+    for method in ("zigzag", "ring", "lpt", "random"):
+        plan = dist.PLANNERS[method](W, G)
+        blocks = np.concatenate(plan.per_rank_blocks)
+        assert sorted(blocks.tolist()) == list(range(len(W)))
+        np.testing.assert_allclose(plan.loads.sum(), W.sum())
+    lpt = dist.lpt(W, G)
+    assert lpt.makespan <= dist.graham_bound(W, G) + 1e-9
+    # LPT is at least as balanced as the naive contiguous split
+    assert lpt.makespan <= dist.ring(W, G).makespan + 1e-9
+
+
+@given(workloads())
+@settings(max_examples=10, deadline=None)
+def test_lpt_within_433_of_optimal(W):
+    W = W[:10]
+    opt = dist.ilp(W, 3)
+    greedy = dist.lpt(W, 3)
+    assert greedy.makespan <= opt.makespan * (4 / 3) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Partitioner DP
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.1, 50.0), min_size=3, max_size=10),
+       st.integers(2, 4))
+@settings(**SETTINGS)
+def test_partition_layers_valid_and_bounded(costs, k):
+    costs = np.array(costs)
+    bounds = pp.partition_layers(costs, k)
+    assert bounds[0][0] == 0 and bounds[-1][1] == len(costs)
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c and a < b
+    worst = max(costs[a:b].sum() for a, b in bounds)
+    # optimal max-part is never below the mean or the max single layer
+    assert worst >= max(costs.sum() / k - 1e-9, costs.max() - 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle (generated shapes; interpret mode)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(1, 2),
+       st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+       st.sampled_from([16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_kernel_matches_oracle_generated(seed, B, heads, hd):
+    from repro.kernels.ops import bam_attention
+    from repro.kernels.ref import bam_attention_ref
+    H, Hkv = heads
+    T = 32
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, hd))
+    rng = np.random.default_rng(seed)
+    segs = [("text", 0, 8), ("mod", int(rng.integers(1, 4)), 8),
+            ("text", 0, 16)]
+    bits_np, pos_np = bam.build_sample_bits(segs, T)
+    bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T))
+    pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T))
+    out = bam_attention(q, k, v, bits, bits, pos, pos,
+                        impl="bam_interpret", block_q=16, block_k=16)
+    ref = bam_attention_ref(q, k, v, bits, bits, pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-scan equivalences (generated lengths)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.sampled_from([2, 4, 8]))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_chunk_equivalence_generated(seed, chunk):
+    from repro.models.xlstm import mlstm_chunked, mlstm_parallel
+    T = 16
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, T, 2, 4))
+               for i in range(3))
+    log_i = jax.random.normal(jax.random.fold_in(key, 3), (1, T, 2))
+    log_f = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 4), (1, T, 2)) + 1)
+    got, _ = mlstm_chunked(q, k, v, log_i, log_f, chunk)
+    ref = mlstm_parallel(q, k, v, log_i, log_f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
