@@ -1,17 +1,23 @@
 """Paper Table 3 / §6.4: frozen-status-aware vs -unaware pipeline
-partitioning, over the paper's VLM/ALM model grid (Table 1 sizes).
+partitioning, over the paper's VLM/ALM model grid (Table 1 sizes) —
+plus the schedule comparison the B/W split enables: per config, bubble
+fractions for 1F1B vs interleaved-1F1B vs ZB-H1.
 
 Cost oracle: analytic per-layer FLOPs at the paper's workload (1k text
-+ modality tokens, microbatch 1); schedule: the deterministic 1F1B
-simulator. ``derived`` = iteration-time speedup of frozen-aware over
-frozen-unaware partitioning (paper reports up to 1.53x)."""
++ modality tokens, microbatch 1); schedules: the deterministic
+core.schedule simulator. ``derived`` = iteration-time speedup of
+frozen-aware over frozen-unaware partitioning (paper reports up to
+1.53x) + bubble_{1f1b,interleaved,zbh1}. Two freeze settings per
+config: ``ft0`` = fully frozen backbone (projector-only tuning, paper
+§6) and ``ft1`` = frozen encoder with trainable LLM (the common
+fine-tune where ZB-H1's deferred W passes actually have work to
+defer)."""
 import time
-
-import numpy as np
 
 from repro.configs.paper_mllm import (audio_encoder_config, llm_config,
                                       vision_encoder_config)
 from repro.core import pipeline as pp
+from repro.core.schedule import SCHEDULES, get_scheduler
 from repro.models.mllm import AUDIO_TOKENS, VISION_TOKENS
 
 from .common import emit
@@ -21,7 +27,8 @@ MICROBATCHES = 24
 STAGES = 8
 
 
-def profiles(kind: str, enc_size: str, llm_size: str = "M"):
+def profiles(kind: str, enc_size: str, llm_size: str = "M", *,
+             llm_trainable: bool = False):
     llm_cfg = llm_config(llm_size)
     if kind == "vlm":
         enc_cfg = vision_encoder_config(enc_size)
@@ -31,9 +38,10 @@ def profiles(kind: str, enc_size: str, llm_size: str = "M"):
         n_tok = AUDIO_TOKENS
     enc = pp.profile_from_config(enc_cfg, n_tok, frozen=True,
                                  name=f"{kind}-{enc_size}")
-    llm = pp.profile_from_config(llm_cfg, TEXT_LEN + n_tok, frozen=True,
-                                 name="llm")
-    # frozen encoders + frozen LLM + trainable projectors (paper §6)
+    llm = pp.profile_from_config(llm_cfg, TEXT_LEN + n_tok,
+                                 frozen=not llm_trainable, name="llm")
+    # frozen encoders + trainable projectors (paper §6); the LLM is
+    # frozen (projector-only) or trainable (fine-tune) per the flag
     pp.analyze_chain([enc, llm], projector_trainable=[True, False])
     return enc, llm
 
@@ -42,23 +50,50 @@ def run(llm_size: str = "M"):
     rows = []
     for kind in ("vlm", "alm"):
         for enc_size in ("S", "M", "L"):
-            enc, llm = profiles(kind, enc_size, llm_size)
-            t0 = time.perf_counter()
-            res = {}
-            for aware in (True, False):
-                g = pp.build_chain_fused([enc, llm], STAGES,
-                                         frozen_aware=aware)
-                sim = pp.simulate_1f1b(g, MICROBATCHES)
-                res[aware] = sim
-            us = (time.perf_counter() - t0) * 1e6
-            speedup = res[False]["iteration_time"] / \
-                res[True]["iteration_time"]
-            name = f"table3/{kind}-{enc_size}-llm{llm_size}"
-            emit(name, us,
-                 f"speedup={speedup:.3f};bubble_aware="
-                 f"{res[True]['bubble_fraction']:.3f};bubble_unaware="
-                 f"{res[False]['bubble_fraction']:.3f}")
-            rows.append((name, speedup))
+            for llm_trainable in (False, True):
+                enc, llm = profiles(kind, enc_size, llm_size,
+                                    llm_trainable=llm_trainable)
+                t0 = time.perf_counter()
+                res = {}
+                g_aware = None
+                for aware in (True, False):
+                    g = pp.build_chain_fused([enc, llm], STAGES,
+                                             frozen_aware=aware)
+                    res[aware] = pp.simulate_1f1b(g, MICROBATCHES)
+                    if aware:
+                        g_aware = g
+                # schedule comparison at a FIXED device budget (STAGES
+                # devices): interleaved searches its chunk count (2x-
+                # finer partition folded onto the same devices, or v=1)
+                scheds = {
+                    "1f1b": res[True],
+                    "interleaved": pp.simulate_fused_chain(
+                        [enc, llm], STAGES, MICROBATCHES,
+                        schedule="interleaved")[1],
+                    "zb-h1": get_scheduler("zb-h1").simulate(g_aware,
+                                                             MICROBATCHES),
+                }
+                assert all(r["num_devices"] == STAGES
+                           for r in scheds.values())
+                us = (time.perf_counter() - t0) * 1e6
+                speedup = res[False]["iteration_time"] / \
+                    res[True]["iteration_time"]
+                assert scheds["zb-h1"]["bubble_fraction"] <= \
+                    scheds["1f1b"]["bubble_fraction"] + 1e-9, \
+                    "ZB-H1 must not bubble more than 1F1B"
+                name = (f"table3/{kind}-{enc_size}-llm{llm_size}"
+                        f"-ft{int(llm_trainable)}")
+                emit(name, us,
+                     f"speedup={speedup:.3f};bubble_aware="
+                     f"{res[True]['bubble_fraction']:.3f};bubble_unaware="
+                     f"{res[False]['bubble_fraction']:.3f};"
+                     f"bubble_1f1b={scheds['1f1b']['bubble_fraction']:.3f};"
+                     f"bubble_interleaved="
+                     f"{scheds['interleaved']['bubble_fraction']:.3f};"
+                     f"bubble_zbh1={scheds['zb-h1']['bubble_fraction']:.3f}")
+                rows.append((name, speedup,
+                             {s: r["bubble_fraction"]
+                              for s, r in scheds.items()}))
     return rows
 
 

@@ -44,8 +44,11 @@ def run(llm_size: str = "M"):
             encs, llm = valm_profiles(v, a, llm_size)
             t0 = time.perf_counter()
             # Cornstarch: Algorithm-1 auto-parallelized modality-parallel
+            # (1F1B only here so the device accounting matches the
+            # colocated/replicated baselines below, which run 1F1B)
             best = pp.auto_parallelize(encs, llm, total_devices=12,
-                                       num_microbatches=MICROBATCHES)
+                                       num_microbatches=MICROBATCHES,
+                                       schedules=("1f1b",))
             corn = tput_per_device(best, best["devices"])
             # encoders-colocated: fused encoder chain + llm chain, split
             # chosen by forward-time balance (frozen-unaware baseline)
@@ -73,7 +76,7 @@ def run(llm_size: str = "M"):
                  f"speedup_vs_colo={corn / best_colo:.3f};"
                  f"speedup_vs_repl={corn / repl:.3f};"
                  f"stages=llm{best['llm_stages']}+enc"
-                 f"{best['encoder_stages']}")
+                 f"{best['encoder_stages']};sched={best['schedule']}")
             rows.append((name, corn / best_colo, corn / repl))
     return rows
 

@@ -313,24 +313,40 @@ class MultimodalParallelSpec:
     num_microbatches: int = 8
     microbatch_size: int = 1
     frozen_aware: bool = True
+    schedule: str = "1f1b"        # "1f1b" | "interleaved" | "zb-h1"
 
     def apply(self, mllm: MultimodalModule, text_len: int = 1024) -> dict:
         """Build the pipeline plan: per-module stage partitions (using
         the frozen-aware rule) + the modality-parallel graph + its
-        simulated schedule. The shard_map executor
-        (core/modality_parallel.py) consumes plan["graph"]."""
+        simulated schedule (any core.schedule scheduler). The shard_map
+        executor (core/modality_parallel.py) consumes plan["graph"]."""
         assert set(self.encoder_specs) == set(mllm.encoders)
         encs, llm = mllm.profiles(text_len, batch=self.microbatch_size)
         enc_counts = [self.encoder_specs[e.name].pp_size for e in encs]
-        graph = pp.build_modality_parallel(
+        # simulate_plan keeps one device per planned stage under every
+        # schedule (interleaved folds its virtual chunks back onto the
+        # same devices), so the simulated device count always matches
+        # this spec's pp allocation
+        graph, sim = pp.simulate_plan(
             encs, llm, enc_counts, self.llm_spec.pp_size,
+            self.num_microbatches, schedule=self.schedule,
             frozen_aware=self.frozen_aware)
-        sim = pp.simulate_1f1b(graph, self.num_microbatches)
+        if len(graph.stages) != sim["num_devices"]:
+            # interleaved won with a v-times finer chunking; the
+            # executor contract is one stage per device, so plan["graph"]
+            # folds back to the planned partition (the sim keeps the
+            # finer graph's bubble accounting)
+            llm_k = min(self.llm_spec.pp_size, len(llm.layer_fwd))
+            counts = [min(k, len(e.layer_fwd))
+                      for e, k in zip(encs, enc_counts)]
+            graph = pp.build_modality_parallel(
+                encs, llm, counts, llm_k, frozen_aware=self.frozen_aware)
         return {
             "graph": graph,
             "encoder_profiles": encs,
             "llm_profile": llm,
             "schedule": sim,
+            "schedule_name": sim["schedule"],
             "devices": sum(s.devices for s in self.encoder_specs.values())
             + self.llm_spec.devices,
         }

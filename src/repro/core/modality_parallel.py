@@ -9,7 +9,9 @@ SPMD world (DESIGN.md §2):
    ``t = m + s``; activations advance with ``lax.ppermute`` inside a
    ``lax.scan`` over ticks (the standard GPipe-on-TPU construction —
    1F1B's memory policy is a scheduling refinement that SPMD ticks
-   subsume; bubble accounting lives in core/pipeline.py's simulator).
+   subsume; bubble accounting for 1F1B / interleaved-1F1B / ZB-H1 lives
+   in core/schedule's simulator, and ``split_devices`` threads the
+   schedule picked by Algorithm 1 through to the executor plan).
    Autodiff through the scan gives the backward pipeline for free.
 
 2. **Modality islands** (``ModalityIslands``): the paper's modality
@@ -172,11 +174,31 @@ class ModalityIslands:
         return self.llm_fn(llm_p, merged)
 
 
+def schedule_from_plan(plan: Optional[Dict[str, Any]]) -> str:
+    """The pipeline schedule picked for a plan: ``auto_parallelize``
+    results carry the winning name under "schedule";
+    ``MultimodalParallelSpec.apply`` plans carry the simulation dict
+    there and the name under "schedule_name". Defaults to classic
+    1F1B."""
+    plan = plan or {}
+    name = plan.get("schedule")
+    if not isinstance(name, str):
+        name = plan.get("schedule_name")
+    return name if isinstance(name, str) and name else "1f1b"
+
+
 def split_devices(mllm, devices: Sequence[Any],
-                  plan: Optional[Dict[str, int]] = None) -> Dict[str, list]:
+                  plan: Optional[Dict[str, Any]] = None) -> Dict[str, list]:
     """Assign device counts per module (default: 1 per encoder, rest to
-    the LLM — override with a plan from core.pipeline.auto_parallelize)."""
+    the LLM). ``plan`` is either {encoder_name: count} or the result
+    dict of ``core.pipeline.auto_parallelize``, whose per-encoder stage
+    counts are matched by the "encoder_names" it carries. The winning
+    schedule travels separately — read it with ``schedule_from_plan``
+    (this dict stays purely {module: device list})."""
     devices = list(devices)
+    if plan and "encoder_stages" in plan:     # auto_parallelize result
+        names = plan.get("encoder_names") or sorted(mllm.encoders)
+        plan = dict(zip(names, plan["encoder_stages"]))
     plan = plan or {name: 1 for name in mllm.encoders}
     out: Dict[str, list] = {}
     i = 0

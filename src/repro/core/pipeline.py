@@ -1,5 +1,4 @@
-"""Frozen-status-aware pipeline parallelism (Cornstarch §4.2, Alg. 1)
-+ a deterministic 1F1B schedule simulator.
+"""Frozen-status-aware pipeline parallelism (Cornstarch §4.2, Alg. 1).
 
 The paper's key observation: the rule of thumb "backward ≈ 2× forward"
 breaks for MLLMs with frozen constituents. The corrected per-module rule
@@ -12,25 +11,36 @@ breaks for MLLMs with frozen constituents. The corrected per-module rule
 
 drives stage partitioning: balance **fwd+bwd** per stage, not fwd.
 
+Backward further decomposes into an input-grad pass B (blocks the
+upstream stage's backward) and a weight-grad pass W (blocks only the
+optimizer step). Frozen modules have **no W at all** — the decomposition
+the zero-bubble schedulers in ``core.schedule`` exploit:
+
+    module kind                    B factor   W factor
+    frozen, nothing trainable up      0          0
+    frozen, trainable upstream        1          0
+    trainable                         1          1
+    (+1 to B for recompute when any gradient exists)
+
 On this CPU-only container the cost oracle is the analytic per-layer
 FLOPs model (validated against the dry-run roofline terms); on real
 hardware the same interfaces accept measured profiles — the paper itself
 profiles. The partitioning algorithm is unchanged.
 
-Also here: the 1F1B simulator used to reproduce Table 3 / Fig. 7
-(per-stage fwd/bwd times -> iteration time, bubble fraction), DAG-aware
-so modality-parallel schedules (Fig. 6) simulate too.
+Scheduling (1F1B / interleaved-1F1B / ZB-H1 simulation, used to
+reproduce Table 3 / Fig. 7) lives in ``core.schedule``; the graph types
+and ``simulate_1f1b`` are re-exported here for compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.schedule import (PipelineGraph, SCHEDULES,  # noqa: F401
+                                 Stage, chain_graph, get_scheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -77,8 +87,23 @@ class ModuleProfile:
         return f
 
     @property
+    def bwd_weight_factor(self) -> float:
+        """W (weight-grad) share of bwd_factor — frozen ⇒ no W pass."""
+        return 0.0 if self.frozen else 1.0
+
+    @property
+    def bwd_input_factor(self) -> float:
+        """B (input-grad) share of bwd_factor; recompute time attaches
+        here because recomputation must precede the grad matmuls."""
+        return self.bwd_factor - self.bwd_weight_factor
+
+    @property
     def layer_bwd(self) -> np.ndarray:
         return self.layer_fwd * self.bwd_factor
+
+    @property
+    def layer_bwd_w(self) -> np.ndarray:
+        return self.layer_fwd * self.bwd_weight_factor
 
 
 def profile_from_config(cfg: ModelConfig, seq: int, *, frozen: bool,
@@ -138,16 +163,18 @@ def partition_layers(costs: np.ndarray, k: int) -> List[Tuple[int, int]]:
     return bounds[::-1]
 
 
-@dataclasses.dataclass
-class Stage:
-    module: str
-    fwd: float
-    bwd: float
-    layer_range: Tuple[int, int] = (0, 0)
-
-    @property
-    def total(self) -> float:
-        return self.fwd + self.bwd
+def _stages_from_bounds(name, fwd, bwd, bwd_w, bounds,
+                        names: Optional[List[str]] = None) -> List[Stage]:
+    out = []
+    for a, b in bounds:
+        if names is not None:
+            mod = names[a] if names[a] == names[b - 1] else \
+                f"{names[a]}+{names[b - 1]}"
+        else:
+            mod = name
+        out.append(Stage(mod, float(fwd[a:b].sum()), float(bwd[a:b].sum()),
+                         (a, b), bwd_w=float(bwd_w[a:b].sum())))
+    return out
 
 
 def partition_module(m: ModuleProfile, k: int, *,
@@ -157,138 +184,68 @@ def partition_module(m: ModuleProfile, k: int, *,
     bwd = 2·fwd (the baseline's broken assumption)."""
     costs = m.layer_fwd + m.layer_bwd if frozen_aware else m.layer_fwd
     bounds = partition_layers(costs, k)
-    out = []
-    for (a, b) in bounds:
-        f = float(m.layer_fwd[a:b].sum())
-        w = float(m.layer_bwd[a:b].sum())
-        out.append(Stage(m.name, f, w, (a, b)))
-    return out
-
-
-# ---------------------------------------------------------------------------
-# 1F1B schedule simulator (DAG-aware)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class PipelineGraph:
-    """stages: flat list; edges: forward-order dependencies
-    (src_stage_idx -> dst_stage_idx). A chain is edges (i, i+1)."""
-    stages: List[Stage]
-    edges: List[Tuple[int, int]]
-
-    @property
-    def preds(self) -> Dict[int, List[int]]:
-        p: Dict[int, List[int]] = {i: [] for i in range(len(self.stages))}
-        for a, b in self.edges:
-            p[b].append(a)
-        return p
-
-    @property
-    def succs(self) -> Dict[int, List[int]]:
-        s: Dict[int, List[int]] = {i: [] for i in range(len(self.stages))}
-        for a, b in self.edges:
-            s[a].append(b)
-        return s
-
-    def depth_from_end(self, i: int) -> int:
-        succ = self.succs
-        memo: Dict[int, int] = {}
-
-        def rec(j):
-            if j in memo:
-                return memo[j]
-            memo[j] = 1 + max((rec(s) for s in succ[j]), default=0)
-            return memo[j]
-        return rec(i)
-
-
-def chain_graph(stages: List[Stage]) -> PipelineGraph:
-    return PipelineGraph(stages, [(i, i + 1) for i in range(len(stages) - 1)])
+    return _stages_from_bounds(m.name, m.layer_fwd, m.layer_bwd,
+                               m.layer_bwd_w, bounds)
 
 
 def simulate_1f1b(graph: PipelineGraph, num_microbatches: int
                   ) -> Dict[str, float]:
-    """Deterministic discrete-event 1F1B simulation.
+    """Legacy entry point: classic 1F1B (see core.schedule)."""
+    return get_scheduler("1f1b").simulate(graph, num_microbatches)
 
-    Each stage = one device. Ready work: fwd(s,m) after all fwd(p,m) for
-    p in preds(s); bwd(s,m) after fwd(s,m) and all bwd(q,m) for q in
-    succs(s). 1F1B policy per device: prefer backward; admit a new
-    forward only while in-flight < depth_from_end(s) (limits activation
-    memory exactly as 1F1B does).
-    Returns iteration time, per-device busy time, bubble fraction.
-    """
-    S = len(graph.stages)
-    M = num_microbatches
-    preds, succs = graph.preds, graph.succs
-    inflight_cap = [graph.depth_from_end(i) for i in range(S)]
 
-    fwd_done = [[None] * M for _ in range(S)]   # completion times
-    bwd_done = [[None] * M for _ in range(S)]
-    dev_free = [0.0] * S
-    fwd_issued = [0] * S                        # next fwd mb index
-    bwd_issued = [0] * S
-    busy = [0.0] * S
+def _interleaved_search(build_graph, feasible, virtual_chunks: int,
+                        num_microbatches: int
+                        ) -> Tuple[PipelineGraph, Dict[str, float]]:
+    """Search the interleaved virtual-chunk count v from
+    ``virtual_chunks`` down to 1, keeping the fastest simulated
+    schedule. v=1 IS the 1F1B placement — on heterogeneous MLLM chains
+    a device's chunk set mixes forward-heavy frozen-encoder chunks with
+    LLM chunks and chunking can lose, so the degenerate v is a
+    legitimate winner."""
+    best = None
+    for v in range(max(1, int(virtual_chunks)), 0, -1):
+        if not feasible(v):
+            continue
+        g = build_graph(v)
+        sim = get_scheduler("interleaved", virtual_chunks=v).simulate(
+            g, num_microbatches)
+        if best is None or sim["iteration_time"] < \
+                best[1]["iteration_time"]:
+            best = (g, sim)
+    assert best is not None, \
+        "interleaved search found no feasible v (v=1 must be feasible)"
+    return best
 
-    def fwd_ready_at(s, m):
-        ts = [fwd_done[p][m] for p in preds[s]]
-        if any(t is None for t in ts):
-            return None
-        return max(ts, default=0.0)
 
-    def bwd_ready_at(s, m):
-        if fwd_done[s][m] is None:
-            return None
-        ts = [bwd_done[q][m] for q in succs[s]]
-        if any(t is None for t in ts):
-            return None
-        return max(ts + [fwd_done[s][m]])
-
-    # event loop: repeatedly pick, per device, the next admissible item
-    remaining = 2 * S * M
-    guard = 0
-    while remaining > 0:
-        guard += 1
-        if guard > 16 * S * M + 64:
-            raise RuntimeError("simulator deadlock")
-        progressed = False
-        # choose the globally earliest-startable item (greedy list sched)
-        candidates = []
-        for s in range(S):
-            # backward preferred
-            m = bwd_issued[s]
-            if m < M:
-                r = bwd_ready_at(s, m)
-                if r is not None:
-                    candidates.append((max(r, dev_free[s]), 0, s, "bwd", m))
-            m = fwd_issued[s]
-            if m < M:
-                inflight = fwd_issued[s] - bwd_issued[s]
-                if inflight < inflight_cap[s]:
-                    r = fwd_ready_at(s, m)
-                    if r is not None:
-                        candidates.append(
-                            (max(r, dev_free[s]), 1, s, "fwd", m))
-        if not candidates:
-            raise RuntimeError("simulator stalled (bad graph?)")
-        start, _, s, kind, m = min(candidates)
-        dur = graph.stages[s].fwd if kind == "fwd" else graph.stages[s].bwd
-        end = start + dur
-        dev_free[s] = end
-        busy[s] += dur
-        if kind == "fwd":
-            fwd_done[s][m] = end
-            fwd_issued[s] += 1
-        else:
-            bwd_done[s][m] = end
-            bwd_issued[s] += 1
-        remaining -= 1
-        progressed = True
-
-    total = max(max(filter(None, row), default=0.0) for row in bwd_done)
-    bubble = 1.0 - (sum(busy) / (S * total)) if total > 0 else 0.0
-    return {"iteration_time": float(total),
-            "bubble_fraction": float(bubble),
-            "per_device_busy": busy}
+def simulate_plan(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
+                  enc_counts: Sequence[int], llm_stages: int,
+                  num_microbatches: int, *, schedule: str = "1f1b",
+                  frozen_aware: bool = True, virtual_chunks: int = 2
+                  ) -> Tuple[PipelineGraph, Dict[str, float]]:
+    """Build the modality-parallel graph for a stage plan and simulate
+    it under ``schedule`` at a FIXED device budget of one device per
+    planned stage (a stage count exceeding a module's layer count is
+    clamped first, matching the partitioner). Interleaved multiplies
+    the stage counts by v virtual chunks and folds the chunks back onto
+    the same devices (searching v down to 1, the 1F1B placement), so
+    ``sim["num_devices"]`` always equals the planned stage count and
+    schedules compare apples-to-apples on the same hardware."""
+    llm_stages = min(llm_stages, len(llm.layer_fwd))
+    enc_counts = [min(k, len(e.layer_fwd))
+                  for e, k in zip(encoders, enc_counts)]
+    if schedule != "interleaved":
+        g = build_modality_parallel(encoders, llm, enc_counts, llm_stages,
+                                    frozen_aware=frozen_aware)
+        return g, get_scheduler(schedule).simulate(g, num_microbatches)
+    return _interleaved_search(
+        lambda v: build_modality_parallel(
+            encoders, llm, [k * v for k in enc_counts], llm_stages * v,
+            frozen_aware=frozen_aware),
+        lambda v: llm_stages * v <= len(llm.layer_fwd) and all(
+            k * v <= len(e.layer_fwd)
+            for e, k in zip(encoders, enc_counts)),
+        virtual_chunks, num_microbatches)
 
 
 # ---------------------------------------------------------------------------
@@ -302,12 +259,11 @@ def build_colocated(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
     (Megatron-style encoders-colocated, Fig. 1c)."""
     fused_fwd = np.concatenate([e.layer_fwd for e in encoders])
     fused_bwd = np.concatenate([e.layer_bwd for e in encoders])
-    fused = ModuleProfile("encoders", fused_fwd, frozen=False)
+    fused_bwd_w = np.concatenate([e.layer_bwd_w for e in encoders])
     costs = fused_fwd + fused_bwd if frozen_aware else fused_fwd
     bounds = partition_layers(costs, enc_stages)
-    stages = [Stage("encoders", float(fused_fwd[a:b].sum()),
-                    float(fused_bwd[a:b].sum()), (a, b))
-              for a, b in bounds]
+    stages = _stages_from_bounds("encoders", fused_fwd, fused_bwd,
+                                 fused_bwd_w, bounds)
     stages += partition_module(llm, llm_stages, frozen_aware=frozen_aware)
     return chain_graph(stages)
 
@@ -320,7 +276,9 @@ def build_replicated(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
     stages = partition_module(llm, llm_stages, frozen_aware=frozen_aware)
     enc_f = sum(float(e.layer_fwd.sum()) for e in encoders)
     enc_b = sum(float(e.layer_bwd.sum()) for e in encoders)
-    out = [Stage(s.module, s.fwd + enc_f, s.bwd + enc_b, s.layer_range)
+    enc_w = sum(float(e.layer_bwd_w.sum()) for e in encoders)
+    out = [Stage(s.module, s.fwd + enc_f, s.bwd + enc_b, s.layer_range,
+                 bwd_w=s.bwd_w + enc_w)
            for s in stages]
     return chain_graph(out)
 
@@ -360,16 +318,36 @@ def build_chain_fused(modules: Sequence[ModuleProfile], total_stages: int,
     changes."""
     fwd = np.concatenate([m.layer_fwd for m in modules])
     bwd = np.concatenate([m.layer_bwd for m in modules])
+    bwd_w = np.concatenate([m.layer_bwd_w for m in modules])
     names = sum(([m.name] * len(m.layer_fwd) for m in modules), [])
     costs = (fwd + bwd) if frozen_aware else fwd
     bounds = partition_layers(costs, total_stages)
-    stages = []
-    for a, b in bounds:
-        mod = names[a] if names[a] == names[b - 1] else \
-            f"{names[a]}+{names[b - 1]}"
-        stages.append(Stage(mod, float(fwd[a:b].sum()),
-                            float(bwd[a:b].sum()), (a, b)))
-    return chain_graph(stages)
+    return chain_graph(_stages_from_bounds(None, fwd, bwd, bwd_w, bounds,
+                                           names=names))
+
+
+def simulate_fused_chain(modules: Sequence[ModuleProfile],
+                         total_stages: int, num_microbatches: int, *,
+                         schedule: str = "1f1b",
+                         frozen_aware: bool = True,
+                         virtual_chunks: int = 2
+                         ) -> Tuple[PipelineGraph, Dict[str, float]]:
+    """``build_chain_fused`` + schedule simulation at a fixed device
+    budget of ``total_stages`` devices. Interleaved partitions the same
+    chain v times finer and folds the chunks onto the same devices,
+    searching v down to 1 (v=1 is the 1F1B placement) — see
+    ``simulate_plan`` for why the degenerate v may win."""
+    n_layers = sum(len(m.layer_fwd) for m in modules)
+    total_stages = min(total_stages, n_layers)
+    if schedule != "interleaved":
+        g = build_chain_fused(modules, total_stages,
+                              frozen_aware=frozen_aware)
+        return g, get_scheduler(schedule).simulate(g, num_microbatches)
+    return _interleaved_search(
+        lambda v: build_chain_fused(modules, total_stages * v,
+                                    frozen_aware=frozen_aware),
+        lambda v: total_stages * v <= n_layers,
+        virtual_chunks, num_microbatches)
 
 
 # ---------------------------------------------------------------------------
@@ -379,10 +357,13 @@ def build_chain_fused(modules: Sequence[ModuleProfile], total_stages: int,
 def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
                      total_devices: int, num_microbatches: int,
                      *, frozen_aware: bool = True,
-                     max_llm_stages: Optional[int] = None) -> dict:
+                     max_llm_stages: Optional[int] = None,
+                     schedules: Sequence[str] = SCHEDULES) -> dict:
     """For each feasible LLM stage count i: partition the LLM, derive the
-    per-stage time target t_i, fit each encoder to that target, simulate,
-    return the best combination (paper Algorithm 1)."""
+    per-stage time target t_i, fit each encoder to that target, simulate
+    every candidate schedule, return the best combination (paper
+    Algorithm 1, extended to search over schedules). The result dict
+    carries the winning schedule name under ``"schedule"``."""
     best = None
     max_llm = max_llm_stages or min(len(llm.layer_fwd),
                                     total_devices - len(encoders))
@@ -399,16 +380,19 @@ def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
             enc_counts.append(k)
         if i + sum(enc_counts) > total_devices:
             continue
-        g = build_modality_parallel(encoders, llm, enc_counts, i,
-                                    frozen_aware=frozen_aware)
-        sim = simulate_1f1b(g, num_microbatches)
-        cand = {"llm_stages": i, "encoder_stages": enc_counts,
-                "graph": g, **sim,
-                "devices": i + sum(enc_counts),
-                "tput_per_device": num_microbatches /
-                (sim["iteration_time"] * (i + sum(enc_counts)))}
-        if best is None or cand["tput_per_device"] > \
-                best["tput_per_device"]:
-            best = cand
+        for sched in schedules:
+            g, sim = simulate_plan(encoders, llm, enc_counts, i,
+                                   num_microbatches, schedule=sched,
+                                   frozen_aware=frozen_aware)
+            devices = sim["num_devices"]        # == i + sum(enc_counts)
+            cand = {"llm_stages": i, "encoder_stages": enc_counts,
+                    "encoder_names": [e.name for e in encoders],
+                    "graph": g, **sim,
+                    "devices": devices,
+                    "tput_per_device": num_microbatches /
+                    (sim["iteration_time"] * devices)}
+            if best is None or cand["tput_per_device"] > \
+                    best["tput_per_device"]:
+                best = cand
     assert best is not None, "no feasible configuration"
     return best

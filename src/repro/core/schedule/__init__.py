@@ -1,0 +1,35 @@
+"""Pipeline scheduling subsystem: stage graphs, a discrete-event
+simulator over F/B/W work items, and three schedulers behind one
+interface.
+
+Map to the papers:
+
+* ``OneFOneB`` ("1f1b") — the baseline schedule in Cornstarch's
+  Table 3 / Fig. 7 experiments (one stage per device, backward
+  monolithic). Identical behavior to the legacy
+  ``core.pipeline.simulate_1f1b``.
+* ``Interleaved1F1B`` ("interleaved") — Megatron-LM virtual stages:
+  each device hosts v chunks of the layer chain, cutting the
+  fill/drain bubble roughly v-fold (Narayanan et al. 2021, Fig. 8 of
+  that paper; referenced in Cornstarch §2 as the strongest homogeneous
+  baseline).
+* ``ZBH1`` ("zb-h1") — zero-bubble H1 schedule (Qi et al. 2023,
+  ZB-H1/Fig. 4): backward splits into input-grad (B) and weight-grad
+  (W); W only blocks the optimizer step, so it is deferred into
+  bubbles under 1F1B's activation-memory cap. Composed with
+  Cornstarch's frozen-aware costs (§4.2): frozen modules have W = 0,
+  so the split helps MLLMs with frozen encoders more than homogeneous
+  LLMs — the B critical path shrinks by the frozen fraction and all
+  deferral headroom lands on the trainable stages.
+
+The B/W cost decomposition lives on :class:`Stage` (``bwd_w`` field,
+``bwd_b`` property) and is derived from the frozen-aware ``bwd_factor``
+rule by ``core.pipeline.ModuleProfile`` (frozen => W = 0; trainable =>
+W = 1 fwd-equivalent; recompute time attaches to B, where it must run).
+"""
+from .graph import (PipelineGraph, Stage, chain_graph,  # noqa: F401
+                    interleave_devices)
+from .schedulers import (SCHEDULES, Interleaved1F1B,  # noqa: F401
+                         OneFOneB, Scheduler, ZBH1, get_scheduler,
+                         simulate)
+from .simulator import run_schedule  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pipeline stage graph with B/W-decomposed backward costs.
+
+A :class:`Stage` carries three cost terms per microbatch:
+
+    fwd     forward pass (F)
+    bwd     TOTAL backward = B + W (kept as one field so legacy callers
+            that build ``Stage(name, f, b)`` see unchanged semantics)
+    bwd_w   weight-gradient (W) share of ``bwd``; the input-gradient
+            share B = ``bwd - bwd_w`` is what blocks the upstream
+            stage's backward.
+
+Frozen modules have ``bwd_w == 0`` (no weights to update), which is
+why zero-bubble-style scheduling composes so well with Cornstarch's
+frozen-aware costs: there is simply no W work to defer on frozen
+stages, and all the deferral headroom concentrates on trainable ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass
+class Stage:
+    module: str
+    fwd: float
+    bwd: float                          # total backward (B + W)
+    layer_range: Tuple[int, int] = (0, 0)
+    bwd_w: float = 0.0                  # weight-grad (W) share of bwd
+
+    @property
+    def bwd_b(self) -> float:
+        """Input-grad (B) share of backward — the part on the critical
+        path to the upstream stage (includes recompute time)."""
+        return self.bwd - self.bwd_w
+
+    @property
+    def total(self) -> float:
+        return self.fwd + self.bwd
+
+
+@dataclasses.dataclass
+class PipelineGraph:
+    """stages: flat list in topological order; edges: forward-order
+    dependencies (src_stage_idx -> dst_stage_idx). A chain is edges
+    (i, i+1)."""
+    stages: List[Stage]
+    edges: List[Tuple[int, int]]
+
+    @property
+    def preds(self) -> Dict[int, List[int]]:
+        p: Dict[int, List[int]] = {i: [] for i in range(len(self.stages))}
+        for a, b in self.edges:
+            p[b].append(a)
+        return p
+
+    @property
+    def succs(self) -> Dict[int, List[int]]:
+        s: Dict[int, List[int]] = {i: [] for i in range(len(self.stages))}
+        for a, b in self.edges:
+            s[a].append(b)
+        return s
+
+    def depth_from_end(self, i: int) -> int:
+        succ = self.succs
+        memo: Dict[int, int] = {}
+
+        def rec(j):
+            if j in memo:
+                return memo[j]
+            memo[j] = 1 + max((rec(s) for s in succ[j]), default=0)
+            return memo[j]
+        return rec(i)
+
+
+def chain_graph(stages: List[Stage]) -> PipelineGraph:
+    return PipelineGraph(stages, [(i, i + 1) for i in range(len(stages) - 1)])
+
+
+def interleave_devices(graph: PipelineGraph, virtual_chunks: int
+                       ) -> List[int]:
+    """Megatron-style round-robin stage->device map for interleaved
+    1F1B: with S stages and v virtual chunks, D = ceil(S/v) devices and
+    stage s (topological order) runs on device ``s % D`` — device d
+    hosts chunks {d, d+D, d+2D, ...}."""
+    S = len(graph.stages)
+    v = max(1, int(virtual_chunks))
+    D = max(1, -(-S // v))
+    return [s % D for s in range(S)]

@@ -43,6 +43,19 @@ from repro.core import bam
 NEG_INF = -1e30
 
 
+def _compiler_params_cls():
+    """pltpu.CompilerParams was named TPUCompilerParams before jax
+    0.4.38-ish; resolve whichever this JAX exposes."""
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; adapt repro.kernels.bam_attention to "
+            f"this JAX ({jax.__version__})")
+    return cls
+
+
 def _mask_tile(qb, kb, qp, kp, window: int):
     """[bq],[bk] uint32 bitfields + int32 positions -> [bq,bk] bool.
     Mirrors repro.core.bam.allowed_mask (tested against it)."""
@@ -161,7 +174,7 @@ def bam_flash_attention(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params_cls()(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,2 @@
+# Make tests/ a package so `from .helpers import ...` resolves under
+# plain `python -m pytest` (no rootdir-dependent sys.path games).

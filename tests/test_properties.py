@@ -2,11 +2,13 @@
 (deliverable c): BAM mask semantics, distribution planners, the
 partitioner DP, the attention kernel vs its oracle, chunked scans."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bam, distribution as dist
 from repro.core import pipeline as pp
