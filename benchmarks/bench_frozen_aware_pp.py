@@ -1,23 +1,26 @@
 """Paper Table 3 / §6.4: frozen-status-aware vs -unaware pipeline
 partitioning, over the paper's VLM/ALM model grid (Table 1 sizes) —
 plus the schedule comparison the B/W split enables: per config, bubble
-fractions for 1F1B vs interleaved-1F1B vs ZB-H1.
+fractions for all four schedulers (1F1B, interleaved-1F1B with its
+virtual-chunk count swept over {4, 2, 1}, ZB-H1, ZB-V).
 
 Cost oracle: analytic per-layer FLOPs at the paper's workload (1k text
 + modality tokens, microbatch 1); schedules: the deterministic
-core.schedule simulator. ``derived`` = iteration-time speedup of
-frozen-aware over frozen-unaware partitioning (paper reports up to
-1.53x) + bubble_{1f1b,interleaved,zbh1}. Two freeze settings per
-config: ``ft0`` = fully frozen backbone (projector-only tuning, paper
-§6) and ``ft1`` = frozen encoder with trainable LLM (the common
-fine-tune where ZB-H1's deferred W passes actually have work to
-defer)."""
+core.schedule simulator at a FIXED device budget (chunked schedules
+fold their finer partitions back onto the same devices). ``derived`` =
+iteration-time speedup of frozen-aware over frozen-unaware
+partitioning (paper reports up to 1.53x) +
+bubble_{1f1b,interleaved,zbh1,zbv} + the winning chunk counts. Two
+freeze settings per config: ``ft0`` = fully frozen backbone
+(projector-only tuning, paper §6) and ``ft1`` = frozen encoder with
+trainable LLM (the common fine-tune where the zero-bubble schedules'
+deferred W passes actually have work to defer)."""
 import time
 
 from repro.configs.paper_mllm import (audio_encoder_config, llm_config,
                                       vision_encoder_config)
 from repro.core import pipeline as pp
-from repro.core.schedule import SCHEDULES, get_scheduler
+from repro.core.schedule import get_scheduler
 from repro.models.mllm import AUDIO_TOKENS, VISION_TOKENS
 
 from .common import emit
@@ -63,15 +66,21 @@ def run(llm_size: str = "M"):
                     if aware:
                         g_aware = g
                 # schedule comparison at a FIXED device budget (STAGES
-                # devices): interleaved searches its chunk count (2x-
-                # finer partition folded onto the same devices, or v=1)
+                # devices): chunked schedules search their chunk count
+                # (finer partitions folded onto the same devices, or
+                # the v=1 degenerate) — interleaved sweeps v over
+                # {4, 2, 1}, zb-v its inherent {2, 1}
                 scheds = {
                     "1f1b": res[True],
                     "interleaved": pp.simulate_fused_chain(
                         [enc, llm], STAGES, MICROBATCHES,
-                        schedule="interleaved")[1],
+                        schedule="interleaved",
+                        virtual_chunks=(4, 2, 1))[1],
                     "zb-h1": get_scheduler("zb-h1").simulate(g_aware,
                                                              MICROBATCHES),
+                    "zb-v": pp.simulate_fused_chain(
+                        [enc, llm], STAGES, MICROBATCHES,
+                        schedule="zb-v")[1],
                 }
                 assert all(r["num_devices"] == STAGES
                            for r in scheds.values())
@@ -81,6 +90,10 @@ def run(llm_size: str = "M"):
                 assert scheds["zb-h1"]["bubble_fraction"] <= \
                     scheds["1f1b"]["bubble_fraction"] + 1e-9, \
                     "ZB-H1 must not bubble more than 1F1B"
+                assert scheds["zb-v"]["bubble_fraction"] <= \
+                    scheds["zb-h1"]["bubble_fraction"] + 1e-9, \
+                    "ZB-V must not bubble more than ZB-H1 (v=1 is " \
+                    "the ZB-H1 placement)"
                 name = (f"table3/{kind}-{enc_size}-llm{llm_size}"
                         f"-ft{int(llm_trainable)}")
                 emit(name, us,
@@ -90,7 +103,10 @@ def run(llm_size: str = "M"):
                      f"bubble_1f1b={scheds['1f1b']['bubble_fraction']:.3f};"
                      f"bubble_interleaved="
                      f"{scheds['interleaved']['bubble_fraction']:.3f};"
-                     f"bubble_zbh1={scheds['zb-h1']['bubble_fraction']:.3f}")
+                     f"bubble_zbh1={scheds['zb-h1']['bubble_fraction']:.3f};"
+                     f"bubble_zbv={scheds['zb-v']['bubble_fraction']:.3f};"
+                     f"il_chunks={scheds['interleaved']['virtual_chunks']};"
+                     f"zbv_chunks={scheds['zb-v']['virtual_chunks']}")
                 rows.append((name, speedup,
                              {s: r["bubble_fraction"]
                               for s, r in scheds.items()}))

@@ -8,6 +8,8 @@ Emits ``name,us_per_call,derived`` CSV rows:
   table4    — CP token distribution: LPT/random/ring/zigzag (§6.5)
   kernel    — BAM Pallas kernel block-sparsity & memory wins
   roofline  — §Roofline terms from the dry-run artifacts
+  schedmem  — simulator-vs-executor peak-activation validation for
+              every pipeline schedule (fails loudly on divergence)
 """
 import sys
 
@@ -34,6 +36,9 @@ def main() -> None:
     if on("roofline"):
         from benchmarks import bench_roofline
         bench_roofline.run()
+    if on("schedmem"):
+        from benchmarks import bench_schedule_memory
+        bench_schedule_memory.run()
 
 
 if __name__ == '__main__':

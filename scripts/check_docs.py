@@ -1,0 +1,68 @@
+"""Docs smoke checker: every fenced ``python`` code block in README.md
+and docs/*.md must run cleanly (PYTHONPATH=src, fresh subprocess per
+block, asserts and prints included). Fences tagged anything else
+(``bash``, ``text``) are skipped — label a snippet ``python`` only if
+it is meant to be executable documentation.
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+Exit code 0 = all blocks ran; 1 = at least one failed (stderr shows
+the file, block index, and traceback). CI runs this as the docs job.
+"""
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_python_blocks(path):
+    blocks, cur, lang = [], None, None
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            m = FENCE.match(line)
+            if m and cur is None:
+                lang, cur, start = m.group(1), [], lineno + 1
+            elif m:
+                if lang == "python":
+                    blocks.append((start, "".join(cur)))
+                cur, lang = None, None
+            elif cur is not None:
+                cur.append(line)
+    return blocks
+
+
+def main() -> int:
+    docs = [os.path.join(REPO, "README.md")]
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        docs += sorted(os.path.join(docs_dir, n)
+                       for n in os.listdir(docs_dir)
+                       if n.endswith(".md"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    failures = 0
+    total = 0
+    for doc in docs:
+        rel = os.path.relpath(doc, REPO)
+        for start, code in extract_python_blocks(doc):
+            total += 1
+            proc = subprocess.run([sys.executable, "-c", code],
+                                  env=env, capture_output=True,
+                                  text=True, timeout=600)
+            if proc.returncode != 0:
+                failures += 1
+                sys.stderr.write(
+                    f"FAIL {rel}: block at line {start}\n"
+                    f"{proc.stdout}{proc.stderr}\n")
+            else:
+                print(f"ok   {rel}: block at line {start}")
+    print(f"{total - failures}/{total} doc blocks ran cleanly")
+    return 1 if failures or total == 0 else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

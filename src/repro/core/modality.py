@@ -313,7 +313,10 @@ class MultimodalParallelSpec:
     num_microbatches: int = 8
     microbatch_size: int = 1
     frozen_aware: bool = True
-    schedule: str = "1f1b"        # "1f1b" | "interleaved" | "zb-h1"
+    schedule: str = "1f1b"   # "1f1b" | "interleaved" | "zb-h1" | "zb-v"
+    # interleaved's virtual-chunk search: an int ceiling (try v..1) or
+    # an explicit candidate tuple; zb-v always searches {2, 1}
+    virtual_chunks: Any = 2
 
     def apply(self, mllm: MultimodalModule, text_len: int = 1024) -> dict:
         """Build the pipeline plan: per-module stage partitions (using
@@ -324,15 +327,16 @@ class MultimodalParallelSpec:
         encs, llm = mllm.profiles(text_len, batch=self.microbatch_size)
         enc_counts = [self.encoder_specs[e.name].pp_size for e in encs]
         # simulate_plan keeps one device per planned stage under every
-        # schedule (interleaved folds its virtual chunks back onto the
-        # same devices), so the simulated device count always matches
-        # this spec's pp allocation
+        # schedule (chunked schedules fold their virtual chunks back
+        # onto the same devices), so the simulated device count always
+        # matches this spec's pp allocation
         graph, sim = pp.simulate_plan(
             encs, llm, enc_counts, self.llm_spec.pp_size,
             self.num_microbatches, schedule=self.schedule,
-            frozen_aware=self.frozen_aware)
+            frozen_aware=self.frozen_aware,
+            virtual_chunks=self.virtual_chunks)
         if len(graph.stages) != sim["num_devices"]:
-            # interleaved won with a v-times finer chunking; the
+            # a chunked schedule won with a v-times finer partition; the
             # executor contract is one stage per device, so plan["graph"]
             # folds back to the planned partition (the sim keeps the
             # finer graph's bubble accounting)
@@ -347,6 +351,7 @@ class MultimodalParallelSpec:
             "llm_profile": llm,
             "schedule": sim,
             "schedule_name": sim["schedule"],
+            "virtual_chunks": sim["virtual_chunks"],
             "devices": sum(s.devices for s in self.encoder_specs.values())
             + self.llm_spec.devices,
         }

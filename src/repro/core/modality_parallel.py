@@ -9,10 +9,11 @@ SPMD world (DESIGN.md §2):
    ``t = m + s``; activations advance with ``lax.ppermute`` inside a
    ``lax.scan`` over ticks (the standard GPipe-on-TPU construction —
    1F1B's memory policy is a scheduling refinement that SPMD ticks
-   subsume; bubble accounting for 1F1B / interleaved-1F1B / ZB-H1 lives
-   in core/schedule's simulator, and ``split_devices`` threads the
-   schedule picked by Algorithm 1 through to the executor plan).
-   Autodiff through the scan gives the backward pipeline for free.
+   subsume; bubble accounting for 1F1B / interleaved-1F1B / ZB-H1 /
+   ZB-V lives in core/schedule's simulator, and ``split_devices``
+   threads the schedule picked by Algorithm 1 through to the executor
+   plan). Autodiff through the scan gives the backward pipeline for
+   free.
 
 2. **Modality islands** (``ModalityIslands``): the paper's modality
    parallelism proper — each encoder is jitted onto a *disjoint device
@@ -21,8 +22,15 @@ SPMD world (DESIGN.md §2):
    LLM island consumes their outputs. On a real multi-pod TPU each
    island is one pjit program over its submesh.
 
-Both are exercised by tests (subprocess, forced host device count) and
-by the Fig. 9/10-style benchmark; the production dry-run proves the
+3. **Schedule-driven executor** (``execute_schedule``): replays a
+   simulated F/B/W item timeline with real stage computations and real
+   VJPs, holding every inter-stage activation in an instrumented store
+   — the measurement side of the memory-validation harness
+   (``core.schedule.memory``), which cross-checks the simulator's
+   per-device peak-activation claims against execution.
+
+All are exercised by tests (subprocess, forced host device count) and
+by the Fig. 9/10-style benchmarks; the production dry-run proves the
 shard_map executor lowers on the (16, 16) mesh.
 """
 from __future__ import annotations
@@ -174,6 +182,145 @@ class ModalityIslands:
         return self.llm_fn(llm_p, merged)
 
 
+# ---------------------------------------------------------------------------
+# 3. Schedule-driven executor: replay a simulated item timeline with real
+#    stage computations (the memory-validation target)
+# ---------------------------------------------------------------------------
+
+def execute_schedule(stage_fn: Callable, stage_params, microbatches,
+                     graph, sim: Dict[str, Any], *,
+                     microbatch_loss: Optional[Callable] = None,
+                     devices: Optional[Sequence[Any]] = None
+                     ) -> Dict[str, Any]:
+    """Execute a simulated schedule's work-item timeline with REAL
+    stage computations, instrumenting live activations per device.
+
+    This is the executor side of the memory-validation harness
+    (``core.schedule.memory``): the discrete-event simulator claims a
+    per-device peak of live activations under its admission caps
+    (``depth_from_end``); this function replays the exact item order
+    the simulator emitted — F with a real forward, B with a real
+    input-grad VJP, W with a real weight-grad VJP — while holding every
+    inter-stage activation in an explicit store that is filled at F and
+    drained at B. The store's peak occupancy per device is the
+    measurement. Executing the timeline also *validates* it: an item
+    order that violated data dependencies or freed an activation too
+    early dies with a KeyError here rather than silently diverging.
+
+    Contracts (same as ``pipeline_forward``): ``stage_fn(lp, x) -> y``
+    with x/y of identical shape (the residual-stream contract);
+    ``stage_params`` stage-stacked with leading dim S; ``microbatches``
+    [M, ...]; ``graph`` a CHAIN (one pred/succ per stage). ``sim`` is
+    any ``core.schedule`` simulation dict (``items`` + ``device_of``),
+    so folded placements — interleaved round-robin, ZB-V — execute on
+    their simulated device map. When ``devices`` (one JAX device per
+    pipeline rank) is given, each rank's params and activations are
+    placed on its device; otherwise placement is logical.
+
+    Memory accounting mirrors the simulator's model: an activation is
+    live on stage s's device from the execution of F(s, m) until the
+    execution of B(s, m). Two deliberate simplifications, kept
+    symmetric on both sides so the comparison stays exact: (1) output
+    cotangents and in-transit stage outputs are not counted (they hand
+    over at the consumer's admission point, which is what the caps
+    bound); (2) a trainable stage's deferred W pass moves its operands
+    (input activation + output cotangent) to a separate W-residual
+    store, reported as ``peak_w_residuals_per_device`` — the zero-
+    bubble papers' memory-vs-bubble trade-off, measured rather than
+    hidden.
+
+    Returns dict: outputs [M, ...], loss, param_grads (stage-stacked,
+    zero for stages the schedule assigns no W/B-glued weight work),
+    peak_activations_per_device, peak_w_residuals_per_device.
+    """
+    from repro.core.schedule.simulator import is_chain
+
+    assert is_chain(graph), \
+        "execute_schedule replays chain pipelines (one pred per stage)"
+    S = len(graph.stages)
+    M = int(microbatches.shape[0])
+    items = sim["items"]
+    device_of = sim["device_of"]
+    D = int(sim["num_devices"])
+    loss_fn = microbatch_loss or (lambda y: jnp.mean(y ** 2))
+    has_w_items = any(kind == "W" for _, _, _, kind, _, _ in items)
+
+    def rank_param(s):
+        lp = jax.tree.map(lambda a: a[s], stage_params)
+        if devices is not None:
+            lp = jax.device_put(lp, devices[device_of[s]])
+        return lp
+
+    params = [rank_param(s) for s in range(S)]
+    grads = [jax.tree.map(jnp.zeros_like, p) for p in params]
+    store: Dict[tuple, Any] = {}        # (s, m) -> input activation
+    w_store: Dict[tuple, Any] = {}      # (s, m) -> (x, output cotangent)
+    transit: Dict[tuple, Any] = {}      # produced, not yet admitted
+    cot: Dict[tuple, Any] = {}          # (s, m) -> output cotangent
+    outputs = [None] * M
+    peak = [0] * D
+    w_peak = [0] * D
+    loss = 0.0
+
+    def store_count(d):
+        # measure the CONTAINER, not a parallel counter: the peak is
+        # however many entries the store truly holds for device d
+        return sum(1 for (s_, _m) in store if device_of[s_] == d)
+
+    for start, _end, dev, kind, s, m in items:
+        st = graph.stages[s]
+        if kind == "F":
+            x = transit.pop((s, m)) if s > 0 else microbatches[m]
+            if devices is not None:
+                x = jax.device_put(x, devices[dev])
+            store[(s, m)] = x
+            peak[dev] = max(peak[dev], store_count(dev))
+            y = stage_fn(params[s], x)
+            if s == S - 1:
+                outputs[m] = y
+                loss = loss + loss_fn(y)
+                cot[(s, m)] = jax.grad(loss_fn)(y)
+            else:
+                transit[(s + 1, m)] = y
+        elif kind == "B":
+            x = store.pop((s, m))
+            # frozen stages with nothing trainable upstream (bwd_b = 0)
+            # receive no cotangent — their B item only frees memory
+            g = cot.pop((s, m), None)
+            assert g is not None or (st.bwd_b == 0 and st.bwd_w == 0), \
+                f"missing cotangent for B({s}, {m})"
+            if st.bwd_b > 0 and s > 0:
+                _, vjp_x = jax.vjp(lambda xx: stage_fn(params[s], xx), x)
+                (cot[(s - 1, m)],) = vjp_x(g)
+            if st.bwd_w > 0:
+                if has_w_items:              # deferred: park for W
+                    w_store[(s, m)] = (x, g)
+                    w_peak[dev] = max(w_peak[dev], sum(
+                        1 for (s_, _m) in w_store
+                        if device_of[s_] == dev))
+                else:                        # glued: weight grads now
+                    _, vjp_p = jax.vjp(
+                        lambda pp: stage_fn(pp, x), params[s])
+                    (gp,) = vjp_p(g)
+                    grads[s] = jax.tree.map(jnp.add, grads[s], gp)
+        else:                                # W
+            x, g = w_store.pop((s, m))
+            _, vjp_p = jax.vjp(lambda pp: stage_fn(pp, x), params[s])
+            (gp,) = vjp_p(g)
+            grads[s] = jax.tree.map(jnp.add, grads[s], gp)
+
+    assert not store and not w_store and not transit, \
+        "schedule left live activations behind (incomplete timeline)"
+    assert all(y is not None for y in outputs)
+    return {
+        "outputs": jnp.stack(outputs),
+        "loss": loss,
+        "param_grads": jax.tree.map(lambda *xs: jnp.stack(xs), *grads),
+        "peak_activations_per_device": peak,
+        "peak_w_residuals_per_device": w_peak,
+    }
+
+
 def schedule_from_plan(plan: Optional[Dict[str, Any]]) -> str:
     """The pipeline schedule picked for a plan: ``auto_parallelize``
     results carry the winning name under "schedule";
@@ -185,6 +332,17 @@ def schedule_from_plan(plan: Optional[Dict[str, Any]]) -> str:
     if not isinstance(name, str):
         name = plan.get("schedule_name")
     return name if isinstance(name, str) and name else "1f1b"
+
+
+def virtual_chunks_from_plan(plan: Optional[Dict[str, Any]]) -> int:
+    """The winning virtual-chunk count of a plan: both
+    ``auto_parallelize`` results and ``MultimodalParallelSpec.apply``
+    plans carry it under "virtual_chunks" (the simulator tags every
+    run). Defaults to 1 — one chunk per device, the executor's plain
+    placement."""
+    plan = plan or {}
+    v = plan.get("virtual_chunks")
+    return int(v) if isinstance(v, int) and v >= 1 else 1
 
 
 def split_devices(mllm, devices: Sequence[Any],

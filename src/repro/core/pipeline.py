@@ -27,9 +27,16 @@ FLOPs model (validated against the dry-run roofline terms); on real
 hardware the same interfaces accept measured profiles — the paper itself
 profiles. The partitioning algorithm is unchanged.
 
-Scheduling (1F1B / interleaved-1F1B / ZB-H1 simulation, used to
-reproduce Table 3 / Fig. 7) lives in ``core.schedule``; the graph types
-and ``simulate_1f1b`` are re-exported here for compatibility.
+Scheduling lives in ``core.schedule``: the F/B/W discrete-event
+simulator and the four schedulers (1F1B / interleaved-1F1B / ZB-H1 /
+ZB-V) used to reproduce Table 3 / Fig. 7, plus the simulator-vs-
+executor memory validation harness. This module supplies the cost
+model and the search: ``auto_parallelize`` (paper Algorithm 1)
+partitions stages frozen-aware and searches (schedule, virtual-chunk
+count) jointly — chunked schedules (interleaved, zb-v) fold v-times
+finer partitions back onto the planned devices so every candidate is
+compared at the same device budget. The graph types and
+``simulate_1f1b`` are re-exported here for compatibility.
 """
 from __future__ import annotations
 
@@ -194,51 +201,79 @@ def simulate_1f1b(graph: PipelineGraph, num_microbatches: int
     return get_scheduler("1f1b").simulate(graph, num_microbatches)
 
 
-def _interleaved_search(build_graph, feasible, virtual_chunks: int,
-                        num_microbatches: int
-                        ) -> Tuple[PipelineGraph, Dict[str, float]]:
-    """Search the interleaved virtual-chunk count v from
-    ``virtual_chunks`` down to 1, keeping the fastest simulated
-    schedule. v=1 IS the 1F1B placement — on heterogeneous MLLM chains
-    a device's chunk set mixes forward-heavy frozen-encoder chunks with
-    LLM chunks and chunking can lose, so the degenerate v is a
-    legitimate winner."""
+def _chunk_candidates(schedule: str, virtual_chunks) -> Tuple[int, ...]:
+    """Virtual-chunk counts a schedule searches over. ``virtual_chunks``
+    is an int ceiling (legacy: try v, v-1, ..., 1) or an explicit
+    sequence of candidates. zb-v places exactly two chunks per device,
+    so its candidate set is always {2, 1}; the unchunked schedules pin
+    v = 1."""
+    if schedule == "zb-v":
+        return (2, 1)
+    if schedule != "interleaved":
+        return (1,)
+    if isinstance(virtual_chunks, int):
+        return tuple(range(max(1, virtual_chunks), 0, -1))
+    vs = tuple(int(v) for v in virtual_chunks)
+    assert vs and all(v >= 1 for v in vs), "virtual_chunks must be >= 1"
+    return vs
+
+
+def _chunked_search(schedule: str, build_graph, feasible, virtual_chunks,
+                    num_microbatches: int
+                    ) -> Tuple[PipelineGraph, Dict[str, float]]:
+    """Search the virtual-chunk count for a schedule, keeping the
+    fastest simulation. v=1 is the one-chunk-per-device degenerate (the
+    1F1B placement for interleaved, the ZB-H1 placement for zb-v) — on
+    heterogeneous MLLM chains a device's chunk set mixes forward-heavy
+    frozen-encoder chunks with LLM chunks and chunking can lose, so the
+    degenerate v is a legitimate winner and chunked schedules are never
+    scheduled worse than their unchunked selves."""
+    candidates = _chunk_candidates(schedule, virtual_chunks)
+    if not any(feasible(v) for v in candidates):
+        # an explicit candidate tuple may be entirely infeasible for a
+        # shallow module (e.g. virtual_chunks=(4,) on an 8-layer LLM
+        # split 4 ways); degrade to the always-feasible v=1 placement
+        # rather than dying — the documented fold-back behavior
+        candidates = (1,)
     best = None
-    for v in range(max(1, int(virtual_chunks)), 0, -1):
+    for v in candidates:
         if not feasible(v):
             continue
         g = build_graph(v)
-        sim = get_scheduler("interleaved", virtual_chunks=v).simulate(
+        kwargs = {"virtual_chunks": v} \
+            if schedule in ("interleaved", "zb-v") else {}
+        sim = get_scheduler(schedule, **kwargs).simulate(
             g, num_microbatches)
         if best is None or sim["iteration_time"] < \
                 best[1]["iteration_time"]:
             best = (g, sim)
     assert best is not None, \
-        "interleaved search found no feasible v (v=1 must be feasible)"
+        f"{schedule}: v=1 must always be feasible"
     return best
 
 
 def simulate_plan(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
                   enc_counts: Sequence[int], llm_stages: int,
                   num_microbatches: int, *, schedule: str = "1f1b",
-                  frozen_aware: bool = True, virtual_chunks: int = 2
+                  frozen_aware: bool = True, virtual_chunks=2
                   ) -> Tuple[PipelineGraph, Dict[str, float]]:
     """Build the modality-parallel graph for a stage plan and simulate
     it under ``schedule`` at a FIXED device budget of one device per
     planned stage (a stage count exceeding a module's layer count is
-    clamped first, matching the partitioner). Interleaved multiplies
-    the stage counts by v virtual chunks and folds the chunks back onto
-    the same devices (searching v down to 1, the 1F1B placement), so
-    ``sim["num_devices"]`` always equals the planned stage count and
-    schedules compare apples-to-apples on the same hardware."""
+    clamped first, matching the partitioner). Chunked schedules
+    (interleaved, zb-v) multiply the stage counts by v virtual chunks
+    and fold the chunks back onto the same devices — round-robin for
+    interleaved, V-shaped for zb-v — searching their candidate v set
+    down to the v=1 degenerate, so ``sim["num_devices"]`` always equals
+    the planned stage count and schedules compare apples-to-apples on
+    the same hardware. ``virtual_chunks`` is an int ceiling or an
+    explicit candidate sequence for the interleaved search; zb-v always
+    searches {2, 1}."""
     llm_stages = min(llm_stages, len(llm.layer_fwd))
     enc_counts = [min(k, len(e.layer_fwd))
                   for e, k in zip(encoders, enc_counts)]
-    if schedule != "interleaved":
-        g = build_modality_parallel(encoders, llm, enc_counts, llm_stages,
-                                    frozen_aware=frozen_aware)
-        return g, get_scheduler(schedule).simulate(g, num_microbatches)
-    return _interleaved_search(
+    return _chunked_search(
+        schedule,
         lambda v: build_modality_parallel(
             encoders, llm, [k * v for k in enc_counts], llm_stages * v,
             frozen_aware=frozen_aware),
@@ -330,20 +365,18 @@ def simulate_fused_chain(modules: Sequence[ModuleProfile],
                          total_stages: int, num_microbatches: int, *,
                          schedule: str = "1f1b",
                          frozen_aware: bool = True,
-                         virtual_chunks: int = 2
+                         virtual_chunks=2
                          ) -> Tuple[PipelineGraph, Dict[str, float]]:
     """``build_chain_fused`` + schedule simulation at a fixed device
-    budget of ``total_stages`` devices. Interleaved partitions the same
-    chain v times finer and folds the chunks onto the same devices,
-    searching v down to 1 (v=1 is the 1F1B placement) — see
-    ``simulate_plan`` for why the degenerate v may win."""
+    budget of ``total_stages`` devices. Chunked schedules (interleaved,
+    zb-v) partition the same chain v times finer and fold the chunks
+    onto the same devices — round-robin or V-shaped — searching v down
+    to the v=1 degenerate; see ``simulate_plan`` for why the degenerate
+    v may win."""
     n_layers = sum(len(m.layer_fwd) for m in modules)
     total_stages = min(total_stages, n_layers)
-    if schedule != "interleaved":
-        g = build_chain_fused(modules, total_stages,
-                              frozen_aware=frozen_aware)
-        return g, get_scheduler(schedule).simulate(g, num_microbatches)
-    return _interleaved_search(
+    return _chunked_search(
+        schedule,
         lambda v: build_chain_fused(modules, total_stages * v,
                                     frozen_aware=frozen_aware),
         lambda v: total_stages * v <= n_layers,
@@ -358,12 +391,17 @@ def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
                      total_devices: int, num_microbatches: int,
                      *, frozen_aware: bool = True,
                      max_llm_stages: Optional[int] = None,
-                     schedules: Sequence[str] = SCHEDULES) -> dict:
+                     schedules: Sequence[str] = SCHEDULES,
+                     virtual_chunks: Sequence[int] = (1, 2, 4)) -> dict:
     """For each feasible LLM stage count i: partition the LLM, derive the
     per-stage time target t_i, fit each encoder to that target, simulate
-    every candidate schedule, return the best combination (paper
-    Algorithm 1, extended to search over schedules). The result dict
-    carries the winning schedule name under ``"schedule"``."""
+    every candidate (schedule, virtual-chunk count) pair, return the
+    best combination (paper Algorithm 1, extended to search schedules
+    and chunking jointly). ``virtual_chunks`` is the candidate v set
+    for the interleaved schedule (zb-v always searches {2, 1}; 1f1b
+    and zb-h1 pin v = 1). The result dict carries the winning schedule
+    name under ``"schedule"`` and the winning chunk count under
+    ``"virtual_chunks"``."""
     best = None
     max_llm = max_llm_stages or min(len(llm.layer_fwd),
                                     total_devices - len(encoders))
@@ -380,10 +418,23 @@ def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
             enc_counts.append(k)
         if i + sum(enc_counts) > total_devices:
             continue
+        def fits(v, i=i, enc_counts=enc_counts):
+            return i * v <= len(llm.layer_fwd) and all(
+                k * v <= len(e.layer_fwd)
+                for e, k in zip(encoders, enc_counts))
+
+        candidates = []
         for sched in schedules:
+            if sched == "interleaved":
+                candidates += [(sched, (v,))
+                               for v in virtual_chunks if fits(v)]
+            else:            # zb-v expands to {2, 1} internally
+                candidates.append((sched, virtual_chunks))
+        for sched, vs in candidates:
             g, sim = simulate_plan(encoders, llm, enc_counts, i,
                                    num_microbatches, schedule=sched,
-                                   frozen_aware=frozen_aware)
+                                   frozen_aware=frozen_aware,
+                                   virtual_chunks=vs)
             devices = sim["num_devices"]        # == i + sum(enc_counts)
             cand = {"llm_stages": i, "encoder_stages": enc_counts,
                     "encoder_names": [e.name for e in encoders],

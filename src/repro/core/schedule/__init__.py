@@ -1,6 +1,7 @@
 """Pipeline scheduling subsystem: stage graphs, a discrete-event
-simulator over F/B/W work items, and three schedulers behind one
-interface.
+simulator over F/B/W work items, four schedulers behind one interface,
+and a memory-validation harness tying the simulator's activation model
+to the real executor.
 
 Map to the papers:
 
@@ -21,15 +22,34 @@ Map to the papers:
   so the split helps MLLMs with frozen encoders more than homogeneous
   LLMs — the B critical path shrinks by the frozen fraction and all
   deferral headroom lands on the trainable stages.
+* ``ZBV`` ("zb-v") — zero-bubble V schedule (Qi et al. 2023, the V
+  placement): the chain is cut into 2p chunk-stages on p devices,
+  device i hosting chunks i and 2p-1-i, so the forward walks down the
+  device column and back up. The last chunk lives on device 0, whose
+  backward starts without a drain wait, and the deferred W passes fill
+  BOTH ramps of the V under V-shaped per-chunk caps that keep the
+  per-device live-activation total inside the 1F1B envelope (and,
+  unlike 1F1B, uniform across devices). Frozen chunks have no W, so
+  the ramp-filling headroom concentrates on the trainable chunks.
 
 The B/W cost decomposition lives on :class:`Stage` (``bwd_w`` field,
 ``bwd_b`` property) and is derived from the frozen-aware ``bwd_factor``
 rule by ``core.pipeline.ModuleProfile`` (frozen => W = 0; trainable =>
 W = 1 fwd-equivalent; recompute time attaches to B, where it must run).
+
+Every simulation returns its work-item timeline, stage->device map,
+and per-device peak live activations; ``core.schedule.memory``
+replays that timeline on the real executor
+(``core.modality_parallel.execute_schedule``) and fails loudly if the
+measured peaks diverge from the simulated ones or breach the
+``depth_from_end`` caps.
 """
 from .graph import (PipelineGraph, Stage, chain_graph,  # noqa: F401
-                    interleave_devices)
+                    interleave_devices, refine_chain, v_shape_devices)
 from .schedulers import (SCHEDULES, Interleaved1F1B,  # noqa: F401
-                         OneFOneB, Scheduler, ZBH1, get_scheduler,
+                         OneFOneB, Scheduler, ZBH1, ZBV, get_scheduler,
                          simulate)
-from .simulator import run_schedule  # noqa: F401
+from .simulator import (peak_live_activations, run_schedule,  # noqa: F401
+                        sort_items)
+from .memory import (MemoryModelMismatch,  # noqa: F401
+                     activation_caps, validate_schedule_memory)

@@ -87,3 +87,43 @@ def interleave_devices(graph: PipelineGraph, virtual_chunks: int
     v = max(1, int(virtual_chunks))
     D = max(1, -(-S // v))
     return [s % D for s in range(S)]
+
+
+def v_shape_devices(num_stages: int) -> List[int]:
+    """ZB-V stage->device map (Qi et al. 2023): S = 2p chunk-stages on
+    p devices, device i hosting chunks i and 2p-1-i. The forward chain
+    walks down the device column and back up — a V — so the LAST chunk
+    lives on device 0, whose backward can start the moment its own
+    forward ramp finishes, and the W passes of both hosted chunks fill
+    the two ramps."""
+    S = int(num_stages)
+    assert S >= 2 and S % 2 == 0, \
+        "ZB-V placement needs an even chunk-stage count (2 per device)"
+    p = S // 2
+    return [s if s < p else S - 1 - s for s in range(S)]
+
+
+def refine_chain(graph: PipelineGraph, virtual_chunks: int
+                 ) -> PipelineGraph:
+    """Split every stage of a CHAIN graph into ``virtual_chunks`` equal
+    sub-stages (costs divided evenly, layer ranges split contiguously).
+    This is the generalized virtual-chunk construction used when a
+    finer partition cannot be re-derived from module profiles — e.g.
+    raw ``Stage`` fixtures; ``auto_parallelize`` re-partitions from
+    profiles instead, which respects real per-layer costs."""
+    v = max(1, int(virtual_chunks))
+    if v == 1:
+        return graph
+    assert sorted(graph.edges) == [(i, i + 1)
+                                   for i in range(len(graph.stages) - 1)], \
+        "refine_chain only applies to chain graphs"
+    out: List[Stage] = []
+    for st in graph.stages:
+        a, b = st.layer_range
+        n = b - a
+        for c in range(v):
+            la = a + (n * c) // v
+            lb = a + (n * (c + 1)) // v
+            out.append(Stage(st.module, st.fwd / v, st.bwd / v,
+                             (la, lb), bwd_w=st.bwd_w / v))
+    return chain_graph(out)

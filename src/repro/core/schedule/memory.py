@@ -1,0 +1,148 @@
+"""Simulator-vs-executor validation of the activation-memory model.
+
+The discrete-event simulator (``simulator.run_schedule``) admits a
+forward only while the stage's in-flight microbatches stay below
+``depth_from_end`` — 1F1B's activation cap — and reports the per-device
+peak of live activations its timeline actually reaches
+(``peak_activations_per_device``). That number is a *model*; this
+module checks it against *measurement*: the schedule-driven executor
+(``core.modality_parallel.execute_schedule``) replays the same item
+timeline with real JAX stage computations and real VJPs, holding every
+inter-stage activation in an explicit store filled at F and drained at
+B, and reports the store's measured peak per device.
+
+``validate_schedule_memory`` runs both sides for one (graph, schedule)
+pair and **fails loudly** (:class:`MemoryModelMismatch`) when:
+
+* the executor-measured peak differs from the simulator's on any
+  device. They must match EXACTLY: the simulator counts its claim off
+  the item timeline, the executor counts the entries its real
+  activation store holds while replaying it. What this catches is
+  bookkeeping divergence — a store leak, a double free, an item
+  attributed to the wrong device, an admission decision the timeline
+  does not honor. What it cannot catch, by construction, is a blind
+  spot shared by both sides' *model* (both deliberately exclude
+  in-transit outputs and cotangents — see the unit definition below),
+  so it complements rather than replaces the two independent checks:
+* any measured peak exceeds the ``depth_from_end`` cap envelope
+  (``activation_caps``), i.e. the schedule used more memory than the
+  policy it claims to respect — an absolute bound, not a
+  self-comparison;
+* the timeline is not executable as emitted: a dependency violation
+  or premature free dies with a KeyError inside the executor, and the
+  executor's gradients are checked against plain autodiff in the
+  tests, so the replay provably computes the real backward.
+
+The memory *unit* is one inter-stage activation (the residual-stream
+tensor the input-grad pass B consumes). Chunked placements (zb-v,
+interleaved) hold proportionally smaller per-chunk activations — a
+device at peak 2p under ZB-V's two-chunks-per-device fold holds the
+same bytes as a 1F1B device at peak p — so cross-schedule comparisons
+must weight peaks by 1/v; same-schedule sim-vs-executor comparisons
+are exact counts. Deferred W passes additionally park their operands
+in a separate W-residual store, reported (not capped) as the zero-
+bubble papers' explicit memory-vs-bubble trade-off.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from .graph import PipelineGraph
+from .schedulers import get_scheduler
+
+
+class MemoryModelMismatch(AssertionError):
+    """The simulator's activation-memory claim diverged from the
+    executor's measurement (or breached its own cap)."""
+
+
+def activation_caps(graph: PipelineGraph,
+                    device_of: Optional[Sequence[int]] = None,
+                    num_microbatches: Optional[int] = None) -> List[int]:
+    """Per-device in-flight activation cap: the sum over hosted stages
+    of ``depth_from_end`` (each additionally bounded by the microbatch
+    count — a stage can never hold more activations than there are
+    microbatches). One stage per device when ``device_of`` is None."""
+    S = len(graph.stages)
+    if device_of is None:
+        device_of = list(range(S))
+    D = max(device_of) + 1
+    caps = [0] * D
+    for s in range(S):
+        d = graph.depth_from_end(s)
+        if num_microbatches is not None:
+            d = min(d, num_microbatches)
+        caps[device_of[s]] += d
+    return caps
+
+
+def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
+                             schedule: str = "1f1b", *,
+                             virtual_chunks: Optional[int] = None,
+                             d_model: int = 16, batch: int = 1,
+                             seq: int = 4, seed: int = 0,
+                             stage_fn=None, stage_params=None,
+                             microbatches=None,
+                             sim: Optional[Dict[str, object]] = None
+                             ) -> Dict[str, object]:
+    """Simulate ``schedule`` on ``graph``, replay the timeline on the
+    real executor, and cross-check the activation-memory claims.
+
+    When no model is supplied, a toy residual stage (``x + tanh(x W)``,
+    one weight matrix per stage) is built — enough to exercise real
+    forwards, real input-grad and weight-grad VJPs, and real activation
+    buffers. A precomputed ``sim`` dict skips the scheduler call (used
+    to prove the harness actually fails on a divergent claim). Raises
+    :class:`MemoryModelMismatch` on any divergence; returns the
+    comparison report otherwise."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.modality_parallel import execute_schedule
+
+    if sim is None:
+        kwargs = {"virtual_chunks": virtual_chunks} \
+            if virtual_chunks is not None else {}
+        sim = get_scheduler(schedule, **kwargs).simulate(graph,
+                                                         num_microbatches)
+
+    if stage_fn is None:
+        S = len(graph.stages)
+        key = jax.random.PRNGKey(seed)
+        stage_params = {"w": jax.random.normal(
+            key, (S, d_model, d_model)) * 0.1}
+
+        def stage_fn(lp, x):
+            return x + jnp.tanh(x @ lp["w"])
+
+        microbatches = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (num_microbatches, batch, seq, d_model))
+
+    measured = execute_schedule(stage_fn, stage_params, microbatches,
+                                graph, sim)
+    sim_peaks = sim["peak_activations_per_device"]
+    exe_peaks = measured["peak_activations_per_device"]
+    caps = activation_caps(graph, sim["device_of"], num_microbatches)
+    report = {
+        "schedule": sim["schedule"],
+        "virtual_chunks": sim["virtual_chunks"],
+        "num_devices": sim["num_devices"],
+        "simulated_peaks": list(sim_peaks),
+        "executor_peaks": list(exe_peaks),
+        "caps": caps,
+        "peak_w_residuals": measured["peak_w_residuals_per_device"],
+        "loss": float(measured["loss"]),
+    }
+    if list(sim_peaks) != list(exe_peaks):
+        raise MemoryModelMismatch(
+            f"simulator peak activations {sim_peaks} != executor "
+            f"measurement {exe_peaks} for schedule "
+            f"{sim['schedule']!r} ({report})")
+    over = [d for d in range(sim["num_devices"])
+            if exe_peaks[d] > caps[d]]
+    if over:
+        raise MemoryModelMismatch(
+            f"measured peaks exceed depth_from_end caps on devices "
+            f"{over}: peaks={exe_peaks} caps={caps} for schedule "
+            f"{sim['schedule']!r} ({report})")
+    return report

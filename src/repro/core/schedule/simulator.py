@@ -29,24 +29,82 @@ Activation-memory policy: a stage admits a new forward only while its
 in-flight microbatches (forwards issued minus backwards issued) stay
 below ``depth_from_end`` — exactly 1F1B's memory cap. ZB-H1 inherits
 the same cap (its defining property: zero-bubble gains at 1F1B memory).
+
+Every simulation also returns its full work-item timeline (``items``:
+``(start, end, device, kind, stage, microbatch)`` tuples, sorted in a
+dependency-respecting execution order), the stage->device map it ran
+under (``device_of``), and the measured per-device peak of live
+activations (``peak_activations_per_device``). An activation is live
+from the execution of F(s, m) until the execution of B(s, m) — the
+inter-stage residual the input-grad pass consumes. These three fields
+feed the memory-validation harness (``core.schedule.memory``), which
+replays the same timeline on the real executor and cross-checks the
+peaks against ``depth_from_end``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .graph import PipelineGraph
+
+Item = Tuple[float, float, int, str, int, int]
+_KIND_RANK = {"B": 0, "F": 1, "W": 2}
+
+
+def sort_items(items: List[Item]) -> List[Item]:
+    """Dependency-respecting total order: by start time; at equal start
+    (only possible through zero-duration frozen B passes) B before F
+    before W, B chains in reverse stage order (successor's B feeds the
+    predecessor's), F chains in forward stage order."""
+    def key(it):
+        start, _end, _dev, kind, stage, mb = it
+        return (start, _KIND_RANK[kind],
+                -stage if kind == "B" else stage, mb)
+    return sorted(items, key=key)
+
+
+def peak_live_activations(items: List[Item], num_devices: int
+                          ) -> List[int]:
+    """Per-device peak number of live activations over an item
+    timeline. F(s, m) materializes one activation on its device;
+    B(s, m) consumes it (W passes read per-layer weight-grad residuals
+    accounted to the W item itself, not this store — the simplification
+    the module docstring spells out). Items on one device never overlap
+    in time, so the per-device prefix-sum walk is exact."""
+    occ = [0] * num_devices
+    peak = [0] * num_devices
+    for _start, _end, dev, kind, _stage, _mb in items:
+        if kind == "F":
+            occ[dev] += 1
+            peak[dev] = max(peak[dev], occ[dev])
+        elif kind == "B":
+            occ[dev] -= 1
+    return peak
 
 
 def run_schedule(graph: PipelineGraph, num_microbatches: int, *,
                  device_of: Optional[List[int]] = None,
-                 split_bw: bool = False) -> Dict[str, object]:
+                 split_bw: bool = False,
+                 stage_caps: Optional[List[int]] = None
+                 ) -> Dict[str, object]:
     """Greedy earliest-start list scheduling (deterministic). Returns
     iteration time (optimizer-step start: all B AND W complete),
-    per-device busy time, bubble fraction, device count."""
+    per-device busy time, bubble fraction, device count.
+
+    ``stage_caps`` overrides the per-stage ``depth_from_end`` in-flight
+    bound (clamped to it from above, floored at 1 so the no-deadlock
+    guarantee of per-stage caps >= 1 holds). Folded placements need
+    tighter caps: per-stage depth caps are exact for one stage per
+    device, but their per-device SUM exceeds the 1F1B envelope once a
+    device hosts several chunks — ZB-V passes V-shaped caps here to
+    keep its 1F1B memory-parity claim honest."""
     S = len(graph.stages)
     M = num_microbatches
     preds, succs = graph.preds, graph.succs
     cap = [graph.depth_from_end(i) for i in range(S)]
+    if stage_caps is not None:
+        assert len(stage_caps) == S
+        cap = [max(1, min(cap[i], int(stage_caps[i]))) for i in range(S)]
     if device_of is None:
         device_of = list(range(S))
     assert len(device_of) == S
@@ -63,6 +121,7 @@ def run_schedule(graph: PipelineGraph, num_microbatches: int, *,
     bwd_issued = [0] * S
     busy = [0.0] * D
     intervals = [[] for _ in range(D)]           # per-device (start, end)
+    items: List[Item] = []
     finish = 0.0                                 # max B completion
 
     def fwd_ready_at(s, m):
@@ -110,6 +169,7 @@ def run_schedule(graph: PipelineGraph, num_microbatches: int, *,
         dev_free[d] = end
         busy[d] += dur
         intervals[d].append((start, end))
+        items.append((start, end, d, kind, s, m))
         if kind == "F":
             fwd_done[s][m] = end
             fwd_issued[s] += 1
@@ -146,19 +206,29 @@ def run_schedule(graph: PipelineGraph, num_microbatches: int, *,
                     tail = max(tail, ready) + dur
                     end = tail
                 busy[d] += dur
+                items.append((end - dur, end, d, "W", s, m))
                 finish = max(finish, end)
 
+    items = sort_items(items)
     total = finish
     bubble = 1.0 - (sum(busy) / (D * total)) if total > 0 else 0.0
     return {"iteration_time": float(total),
             "bubble_fraction": float(bubble),
             "per_device_busy": busy,
-            "num_devices": D}
+            "num_devices": D,
+            "device_of": list(device_of),
+            "items": items,
+            "peak_activations_per_device":
+                peak_live_activations(items, D)}
 
 
 def is_chain(graph: PipelineGraph) -> bool:
-    return graph.edges == [(i, i + 1)
-                           for i in range(len(graph.stages) - 1)]
+    """True when the graph is a linear chain 0 -> 1 -> ... -> S-1.
+    Edge ORDER is irrelevant — builders like build_modality_parallel
+    append cross-module edges last, so a single-encoder MLLM graph is
+    a chain whose edge list is merely unsorted."""
+    return sorted(graph.edges) == [(i, i + 1)
+                                   for i in range(len(graph.stages) - 1)]
 
 
 def _interleaved_order(D: int, v: int, M: int):
@@ -207,6 +277,7 @@ def run_interleaved(graph: PipelineGraph, num_microbatches: int,
     bwd_done = [[None] * M for _ in range(S)]
     dev_free = [0.0] * D
     busy = [0.0] * D
+    items: List[Item] = []
     finish = 0.0
     orders = _interleaved_order(D, v, M)
     ptr = [0] * D
@@ -243,6 +314,7 @@ def run_interleaved(graph: PipelineGraph, num_microbatches: int,
         end = start + dur
         dev_free[d] = end
         busy[d] += dur
+        items.append((start, end, d, kind, s, m))
         if kind == "F":
             fwd_done[s][m] = end
         else:
@@ -251,9 +323,14 @@ def run_interleaved(graph: PipelineGraph, num_microbatches: int,
         ptr[d] += 1
         remaining -= 1
 
+    items = sort_items(items)
     total = finish
     bubble = 1.0 - (sum(busy) / (D * total)) if total > 0 else 0.0
     return {"iteration_time": float(total),
             "bubble_fraction": float(bubble),
             "per_device_busy": busy,
-            "num_devices": D}
+            "num_devices": D,
+            "device_of": [s % D for s in range(S)],
+            "items": items,
+            "peak_activations_per_device":
+                peak_live_activations(items, D)}

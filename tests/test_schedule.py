@@ -155,6 +155,107 @@ def test_zbh1_on_modality_parallel_dag():
 
 
 # ---------------------------------------------------------------------------
+# ZB-V invariants
+# ---------------------------------------------------------------------------
+
+def test_v_shape_devices_map():
+    """Device i hosts chunks i and 2p-1-i: down the column and back."""
+    assert sch.v_shape_devices(8) == [0, 1, 2, 3, 3, 2, 1, 0]
+    assert sch.v_shape_devices(2) == [0, 0]
+    with pytest.raises(AssertionError):
+        sch.v_shape_devices(7)
+
+
+def test_refine_chain_conserves_costs():
+    g = sch.chain_graph([sch.Stage("m", 2.0, 4.0, (0, 8), bwd_w=2.0)
+                         for _ in range(3)])
+    fine = sch.refine_chain(g, 2)
+    assert len(fine.stages) == 6
+    assert sum(s.fwd for s in fine.stages) == pytest.approx(6.0)
+    assert sum(s.bwd for s in fine.stages) == pytest.approx(12.0)
+    assert sum(s.bwd_w for s in fine.stages) == pytest.approx(6.0)
+    assert fine.stages[0].layer_range == (0, 4)
+    assert fine.stages[1].layer_range == (4, 8)
+    assert sch.refine_chain(g, 1) is g
+
+
+@pytest.mark.parametrize("llm_trainable", [False, True])
+@pytest.mark.parametrize("microbatches", [8, 16, 24])
+def test_zbv_bubble_ordering_on_chains(llm_trainable, microbatches):
+    """At a fixed 8-device budget: bubble(zb-v) <= bubble(zb-h1) <=
+    bubble(1f1b). zb-v searches {2, 1} and v=1 IS the ZB-H1 placement,
+    so the first inequality is structural; the second is ZB-H1's
+    glued-fallback guarantee."""
+    modules = list(frozen_mllm_modules(llm_trainable))
+    sims = {s: pp.simulate_fused_chain(modules, 8, microbatches,
+                                       schedule=s)[1]
+            for s in ("1f1b", "zb-h1", "zb-v")}
+    assert all(s["num_devices"] == 8 for s in sims.values())
+    assert sims["zb-v"]["bubble_fraction"] <= \
+        sims["zb-h1"]["bubble_fraction"] + 1e-9
+    assert sims["zb-h1"]["bubble_fraction"] <= \
+        sims["1f1b"]["bubble_fraction"] + 1e-9
+
+
+def test_zbv_beats_zbh1_on_homogeneous_chain():
+    """On a homogeneous all-trainable chain the V fold has fill/drain
+    to win outright over one-chunk-per-device ZB-H1."""
+    coarse = sch.chain_graph(
+        [sch.Stage("m", 2.0, 4.0, bwd_w=2.0) for _ in range(4)])
+    fine = sch.refine_chain(coarse, 2)
+    zh = sch.get_scheduler("zb-h1").simulate(coarse, 8)
+    zv = sch.get_scheduler("zb-v").simulate(fine, 8)
+    assert zv["num_devices"] == zh["num_devices"] == 4
+    assert zv["virtual_chunks"] == 2
+    assert zv["iteration_time"] <= zh["iteration_time"] + 1e-9
+    base = sch.get_scheduler("1f1b").simulate(coarse, 8)
+    assert zv["iteration_time"] < base["iteration_time"]
+
+
+def test_zbv_peak_activations_within_1f1b_envelope():
+    """ZB-V's defining memory claim: with 2 chunk-stages per device
+    (each half a 1F1B stage), every device's peak live activations stay
+    within 2p chunk-activations = the deepest 1F1B device's p coarse
+    activations — and, unlike 1F1B's p..1 ramp, uniformly."""
+    for p, M in [(2, 8), (4, 8), (4, 24)]:
+        coarse = sch.chain_graph(
+            [sch.Stage("m", 2.0, 4.0, bwd_w=2.0) for _ in range(p)])
+        fine = sch.refine_chain(coarse, 2)
+        zv = sch.get_scheduler("zb-v").simulate(fine, M)
+        base = sch.get_scheduler("1f1b").simulate(coarse, M)
+        envelope = 2 * max(base["peak_activations_per_device"])
+        assert all(pk <= envelope
+                   for pk in zv["peak_activations_per_device"]), \
+            (p, M, zv["peak_activations_per_device"], envelope)
+
+
+def test_zbv_frozen_stages_emit_no_w_items():
+    """Frozen chunks have no W pass at all — zero-bubble deferral
+    headroom concentrates on the trainable chunks."""
+    stages = [sch.Stage(f"enc{i}", 1.0, 0.0) for i in range(4)] + \
+        [sch.Stage(f"llm{i}", 1.0, 3.0, bwd_w=1.0) for i in range(4)]
+    g = sch.chain_graph(stages)
+    sim = sch.get_scheduler("zb-v").simulate(g, 8)
+    frozen = {s for s, st in enumerate(g.stages) if st.bwd_w == 0}
+    w_items = [(s, m) for _, _, _, kind, s, m in sim["items"]
+               if kind == "W"]
+    assert w_items, "trainable chunks must have W passes"
+    assert not [it for it in w_items if it[0] in frozen]
+    # fully frozen chain: no W anywhere
+    g0 = sch.chain_graph([sch.Stage("enc", 1.0, 0.0) for _ in range(4)])
+    sim0 = sch.get_scheduler("zb-v").simulate(g0, 8)
+    assert not any(kind == "W" for _, _, _, kind, _, _ in sim0["items"])
+
+
+def test_zbv_degenerate_v1_is_zbh1():
+    g = frozen_mllm_graph(llm_trainable=True)
+    zh = sch.get_scheduler("zb-h1").simulate(g, 8)
+    zv1 = sch.get_scheduler("zb-v", virtual_chunks=1).simulate(g, 8)
+    assert zv1["iteration_time"] == pytest.approx(zh["iteration_time"])
+    assert zv1["virtual_chunks"] == 1 and zv1["schedule"] == "zb-v"
+
+
+# ---------------------------------------------------------------------------
 # Interleaved device mapping
 # ---------------------------------------------------------------------------
 
@@ -210,6 +311,50 @@ def test_auto_parallelize_returns_schedule_name():
                                num_microbatches=8, schedules=("1f1b",))
     assert best["tput_per_device"] >= base["tput_per_device"] - 1e-12
     assert base["schedule"] == "1f1b"
+
+
+def test_auto_parallelize_joint_chunk_search():
+    """Algorithm 1 searches (schedule, virtual_chunks) jointly: the
+    winner carries its chunk count, every sim is tagged with one, and
+    widening the v set can only improve throughput."""
+    e = pp.ModuleProfile("vision", np.ones(8) * 3.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(16) * 2.0, frozen=False,
+                           trainable_upstream=True)
+    best = pp.auto_parallelize([e], llm, total_devices=8,
+                               num_microbatches=8)
+    assert best["schedule"] in sch.SCHEDULES
+    assert best["virtual_chunks"] >= 1
+    narrow = pp.auto_parallelize([e], llm, total_devices=8,
+                                 num_microbatches=8,
+                                 virtual_chunks=(1,))
+    assert best["tput_per_device"] >= narrow["tput_per_device"] - 1e-12
+
+
+def test_infeasible_explicit_chunk_tuple_degrades_to_v1():
+    """An explicit virtual_chunks candidate set that fits nowhere
+    (v=4 on an 8-layer module split 4 ways) degrades to the v=1
+    placement instead of dying — the documented fold-back behavior."""
+    llm = pp.ModuleProfile("llm", np.ones(8) * 2.0, frozen=False)
+    g, sim = pp.simulate_fused_chain([llm], 4, 8, schedule="interleaved",
+                                     virtual_chunks=(4,))
+    assert sim["num_devices"] == 4 and sim["virtual_chunks"] == 1
+
+
+def test_simulate_plan_zbv_keeps_device_budget():
+    """zb-v folds its two chunks per device back onto the planned
+    ranks, so the simulated device count equals the allocation."""
+    e = pp.ModuleProfile("vision", np.ones(4) * 3.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(8) * 2.0, frozen=False,
+                           trainable_upstream=True)
+    g, sim = pp.simulate_plan([e], llm, [2], 4, 8, schedule="zb-v")
+    assert sim["num_devices"] == 6
+    assert len(g.stages) in (6, 12)
+    assert sim["schedule"] == "zb-v"
+    # not enough layers to chunk => the v=1 (ZB-H1 placement) degenerate
+    tiny = pp.ModuleProfile("llm", np.ones(4), frozen=False)
+    g, sim = pp.simulate_plan([], tiny, [], 4, 8, schedule="zb-v")
+    assert sim["num_devices"] == 4 and len(g.stages) == 4
+    assert sim["virtual_chunks"] == 1
 
 
 def test_simulate_plan_keeps_device_budget():
@@ -286,13 +431,18 @@ def test_split_devices_accepts_auto_parallelize_plan():
         encoders = {"audio": None, "vision": None}
 
     # encoder_names carries the caller's profile order, so counts land
-    # on the right encoder even when that order is not name-sorted
+    # on the right encoder even when that order is not name-sorted;
+    # stage counts stay COARSE (one per device) even for chunked
+    # schedules — virtual chunks fold onto the same devices
     plan = {"encoder_stages": [2, 1], "encoder_names": ["vision", "audio"],
-            "schedule": "zb-h1", "llm_stages": 3}
+            "schedule": "zb-v", "virtual_chunks": 2, "llm_stages": 3}
     split = mp.split_devices(FakeMLLM(), list(range(6)), plan=plan)
     assert len(split["vision"]) == 2 and len(split["audio"]) == 1
     assert len(split["llm"]) == 3
     assert all(isinstance(v, list) for v in split.values())
-    assert mp.schedule_from_plan(plan) == "zb-h1"
+    assert mp.schedule_from_plan(plan) == "zb-v"
     assert mp.schedule_from_plan(None) == "1f1b"
     assert mp.schedule_from_plan({"vision": 1}) == "1f1b"
+    assert mp.virtual_chunks_from_plan(plan) == 2
+    assert mp.virtual_chunks_from_plan(None) == 1
+    assert mp.virtual_chunks_from_plan({"vision": 1}) == 1
