@@ -35,9 +35,11 @@ def tile_skip_fraction(bits, pos, bq=128, bk=128):
     return skipped / (nq * nk)
 
 
-def run():
-    for mode in ("ep", "ee", "mp"):
-        for T in (2048, 4096):
+def run(smoke: bool = False):
+    modes = ("mp",) if smoke else ("ep", "ee", "mp")
+    seq_lens = (1024,) if smoke else (2048, 4096)
+    for mode in modes:
+        for T in seq_lens:
             t0 = time.perf_counter()
             bits, pos = random_multimodal_bits(T, mode, seed=0)
             frac = tile_skip_fraction(bits, pos)
@@ -49,7 +51,7 @@ def run():
                  f"mask_mem_ratio={mask_bytes / bam_bytes:.0f}x")
 
     # interpret-mode ordering check (reduced scale)
-    T = 256
+    T = 128 if smoke else 256
     bits_np, pos_np = random_multimodal_bits(T, "mp", seed=0)
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (1, T, 2, 32), jnp.float32)
@@ -60,9 +62,10 @@ def run():
         return bam_flash_attention(q, q, q, bits, bits, pos, pos,
                                    block_q=32, block_k=32,
                                    block_skip=skip, interpret=True)
-    us_skip = timeit(f, True, iters=2, warmup=1)
-    us_dense = timeit(f, False, iters=2, warmup=1)
-    emit("kernel/interpret-T256-mp", us_skip,
+    iters = 1 if smoke else 2
+    us_skip = timeit(f, True, iters=iters, warmup=1)
+    us_dense = timeit(f, False, iters=iters, warmup=1)
+    emit(f"kernel/interpret-T{T}-mp", us_skip,
          f"skip_vs_dense={us_dense / us_skip:.2f}x")
 
 

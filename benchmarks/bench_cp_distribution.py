@@ -23,9 +23,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bam, context_parallel as cp, distribution as dist
+from repro.core import context_parallel as cp
 from repro.data.synthetic import random_multimodal_bits
 from repro.launch.mesh import PEAK_FLOPS_BF16
+from repro.parallel import plan_context
 
 from .common import emit, timeit
 
@@ -39,10 +40,10 @@ def full_scale(seq_len: int, mode: str, seeds=range(3)):
     loads = {m: [] for m in PLANNERS}
     for seed in seeds:
         bits, pos = random_multimodal_bits(seq_len, mode, seed=seed)
-        W = bam.block_workload(bits, pos, BLOCK)
         for m in PLANNERS:
-            plan = dist.PLANNERS[m](W, RANKS, BLOCK) if m != "random" \
-                else dist.random_plan(W, RANKS, BLOCK, seed=seed)
+            kw = {"seed": seed} if m == "random" else {}
+            plan = plan_context(bits, pos, RANKS, block_size=BLOCK,
+                                method=m, **kw)
             loads[m].append(plan.makespan)
     out = {}
     for m in PLANNERS:
@@ -67,9 +68,10 @@ def reduced_scale_measured(mode: str, seq_len: int = 2048):
 
     out = {}
     for m in PLANNERS:
-        plan = dist.plan_tokens(bits_np, pos_np, RANKS, BLOCK // 4,
-                                method=m)
-        loads = cp.simulate_rank_workloads(plan, bits_np, pos_np)
+        plan = plan_context(bits_np, pos_np, RANKS,
+                            block_size=BLOCK // 4, method=m)
+        loads = cp.simulate_rank_workloads(plan.core_plan(), bits_np,
+                                           pos_np)
         worst = int(np.argmax(loads))
         sl = plan.rank_token_slices()[worst]
         sl = jnp.asarray(sl[:seq_len // RANKS])
@@ -80,12 +82,15 @@ def reduced_scale_measured(mode: str, seq_len: int = 2048):
     return out   # ms
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
-    for seq_len in (16384, 32768, 65536):
-        for mode in ("ep", "ee", "mp"):
+    seq_lens = (4096,) if smoke else (16384, 32768, 65536)
+    modes = ("ee",) if smoke else ("ep", "ee", "mp")
+    seeds = range(1) if smoke else range(3)
+    for seq_len in seq_lens:
+        for mode in modes:
             t0 = time.perf_counter()
-            pred = full_scale(seq_len, mode)
+            pred = full_scale(seq_len, mode, seeds=seeds)
             us = (time.perf_counter() - t0) * 1e6
             name = f"table4/T{seq_len}-{mode}"
             emit(name, us,
@@ -94,11 +99,12 @@ def run():
                  + f";lpt_vs_ring={pred['ring'] / pred['lpt']:.3f}")
             rows.append((name, pred))
     # reduced-scale wall-clock confirmation (one setting per mask type)
-    for mode in ("ep", "ee", "mp"):
+    ctrl_seq = 1024 if smoke else 2048
+    for mode in modes:
         t0 = time.perf_counter()
-        ms = reduced_scale_measured(mode)
+        ms = reduced_scale_measured(mode, seq_len=ctrl_seq)
         us = (time.perf_counter() - t0) * 1e6
-        emit(f"table4-densecontrol/T2048-{mode}", us,
+        emit(f"table4-densecontrol/T{ctrl_seq}-{mode}", us,
              ";".join(f"{m}_ms={ms[m]:.2f}" for m in PLANNERS))
     return rows
 

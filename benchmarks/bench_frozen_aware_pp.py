@@ -22,6 +22,7 @@ from repro.configs.paper_mllm import (audio_encoder_config, llm_config,
 from repro.core import pipeline as pp
 from repro.core.schedule import get_scheduler
 from repro.models.mllm import AUDIO_TOKENS, VISION_TOKENS
+from repro.parallel import ClusterSpec, WorkloadShape, search_plan
 
 from .common import emit
 
@@ -49,10 +50,13 @@ def profiles(kind: str, enc_size: str, llm_size: str = "M", *,
     return enc, llm
 
 
-def run(llm_size: str = "M"):
+def run(llm_size: str = "M", smoke: bool = False):
     rows = []
-    for kind in ("vlm", "alm"):
-        for enc_size in ("S", "M", "L"):
+    kinds = ("vlm",) if smoke else ("vlm", "alm")
+    enc_sizes = ("S",) if smoke else ("S", "M", "L")
+    microbatches = 8 if smoke else MICROBATCHES
+    for kind in kinds:
+        for enc_size in enc_sizes:
             for llm_trainable in (False, True):
                 enc, llm = profiles(kind, enc_size, llm_size,
                                     llm_trainable=llm_trainable)
@@ -62,7 +66,7 @@ def run(llm_size: str = "M"):
                 for aware in (True, False):
                     g = pp.build_chain_fused([enc, llm], STAGES,
                                              frozen_aware=aware)
-                    res[aware] = pp.simulate_1f1b(g, MICROBATCHES)
+                    res[aware] = pp.simulate_1f1b(g, microbatches)
                     if aware:
                         g_aware = g
                 # schedule comparison at a FIXED device budget (STAGES
@@ -73,15 +77,22 @@ def run(llm_size: str = "M"):
                 scheds = {
                     "1f1b": res[True],
                     "interleaved": pp.simulate_fused_chain(
-                        [enc, llm], STAGES, MICROBATCHES,
+                        [enc, llm], STAGES, microbatches,
                         schedule="interleaved",
                         virtual_chunks=(4, 2, 1))[1],
-                    "zb-h1": get_scheduler("zb-h1").simulate(g_aware,
-                                                             MICROBATCHES),
+                    "zb-h1": get_scheduler("zb-h1").simulate(
+                        g_aware, microbatches),
                     "zb-v": pp.simulate_fused_chain(
-                        [enc, llm], STAGES, MICROBATCHES,
+                        [enc, llm], STAGES, microbatches,
                         schedule="zb-v")[1],
                 }
+                # the typed joint winner for the same modules at the
+                # same budget (modality-parallel topology, Algorithm 1
+                # + schedule + chunk search through repro.parallel)
+                plan = search_plan(
+                    [enc], llm, ClusterSpec(num_devices=STAGES),
+                    WorkloadShape(text_len=TEXT_LEN,
+                                  num_microbatches=microbatches))
                 assert all(r["num_devices"] == STAGES
                            for r in scheds.values())
                 us = (time.perf_counter() - t0) * 1e6
@@ -106,7 +117,12 @@ def run(llm_size: str = "M"):
                      f"bubble_zbh1={scheds['zb-h1']['bubble_fraction']:.3f};"
                      f"bubble_zbv={scheds['zb-v']['bubble_fraction']:.3f};"
                      f"il_chunks={scheds['interleaved']['virtual_chunks']};"
-                     f"zbv_chunks={scheds['zb-v']['virtual_chunks']}")
+                     f"zbv_chunks={scheds['zb-v']['virtual_chunks']};"
+                     f"plan_sched={plan.schedule.name};"
+                     f"plan_v={plan.schedule.virtual_chunks};"
+                     f"plan_bubble="
+                     f"{plan.schedule.bubble_fraction:.3f};"
+                     f"plan_ranks={plan.pp_devices}")
                 rows.append((name, speedup,
                              {s: r["bubble_fraction"]
                               for s, r in scheds.items()}))

@@ -14,6 +14,7 @@ from repro.configs.paper_mllm import (audio_encoder_config, llm_config,
                                       vision_encoder_config)
 from repro.core import pipeline as pp
 from repro.models.mllm import AUDIO_TOKENS, VISION_TOKENS
+from repro.parallel import ClusterSpec, WorkloadShape, search_plan
 
 from .common import emit
 
@@ -33,41 +34,47 @@ def valm_profiles(v_size: str, a_size: str, llm_size: str = "M"):
     return [vis, aud], llm
 
 
-def tput_per_device(sim, devices):
-    return MICROBATCHES / (sim["iteration_time"] * devices)
+def tput_per_device(sim, devices, microbatches):
+    return microbatches / (sim["iteration_time"] * devices)
 
 
-def run(llm_size: str = "M"):
+def run(llm_size: str = "M", smoke: bool = False):
     rows = []
-    for v in ("S", "M", "L"):
-        for a in ("S", "M", "L"):
+    sizes = ("S",) if smoke else ("S", "M", "L")
+    microbatches = 8 if smoke else MICROBATCHES
+    for v in sizes:
+        for a in sizes:
             encs, llm = valm_profiles(v, a, llm_size)
             t0 = time.perf_counter()
             # Cornstarch: Algorithm-1 auto-parallelized modality-parallel
-            # (1F1B only here so the device accounting matches the
-            # colocated/replicated baselines below, which run 1F1B)
-            best = pp.auto_parallelize(encs, llm, total_devices=12,
-                                       num_microbatches=MICROBATCHES,
-                                       schedules=("1f1b",))
-            corn = tput_per_device(best, best["devices"])
+            # through the typed API (1F1B only here so the device
+            # accounting matches the colocated/replicated baselines
+            # below, which run 1F1B)
+            plan = search_plan(encs, llm, ClusterSpec(num_devices=12),
+                               WorkloadShape(
+                                   text_len=TEXT_LEN,
+                                   num_microbatches=microbatches),
+                               schedules=("1f1b",))
+            devices = plan.pp_devices
+            corn = plan.schedule.tput_per_device
             # encoders-colocated: fused encoder chain + llm chain, split
             # chosen by forward-time balance (frozen-unaware baseline)
             best_colo = None
             for enc_stages in range(1, 8):
-                llm_stages = best["devices"] - enc_stages
+                llm_stages = devices - enc_stages
                 if llm_stages < 1:
                     continue
                 g = pp.build_colocated(encs, llm, enc_stages, llm_stages,
                                        frozen_aware=False)
-                sim = pp.simulate_1f1b(g, MICROBATCHES)
-                t = tput_per_device(sim, best["devices"])
+                sim = pp.simulate_1f1b(g, microbatches)
+                t = tput_per_device(sim, devices, microbatches)
                 if best_colo is None or t > best_colo:
                     best_colo = t
             # encoders-replicated (Meta-Llama style)
-            g = pp.build_replicated(encs, llm, best["devices"],
+            g = pp.build_replicated(encs, llm, devices,
                                     frozen_aware=False)
-            sim = pp.simulate_1f1b(g, MICROBATCHES)
-            repl = tput_per_device(sim, best["devices"])
+            sim = pp.simulate_1f1b(g, microbatches)
+            repl = tput_per_device(sim, devices, microbatches)
             us = (time.perf_counter() - t0) * 1e6
             name = f"table2/valm-{v}{a}-llm{llm_size}"
             emit(name, us,
@@ -75,8 +82,9 @@ def run(llm_size: str = "M"):
                  f"replicated={repl:.3e};"
                  f"speedup_vs_colo={corn / best_colo:.3f};"
                  f"speedup_vs_repl={corn / repl:.3f};"
-                 f"stages=llm{best['llm_stages']}+enc"
-                 f"{best['encoder_stages']};sched={best['schedule']}")
+                 f"stages=llm{plan.stage.llm_stages}+enc"
+                 f"{list(plan.stage.encoder_stages)};"
+                 f"sched={plan.schedule.name}")
             rows.append((name, corn / best_colo, corn / repl))
     return rows
 

@@ -6,12 +6,18 @@ import json
 import os
 
 
-def run(out_dir: str = "experiments/dryrun"):
+def run(out_dir: str = "experiments/dryrun", smoke: bool = False):
     files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    # plan-mode artifacts (plan__*.json) are MLLMParallelPlans, not
+    # lowering reports — they have no roofline terms to read
+    files = [p for p in files
+             if not os.path.basename(p).startswith("plan__")]
     if not files:
         print("roofline/none,0.0,run `python -m repro.launch.dryrun --all`"
               " first", flush=True)
         return
+    if smoke:
+        files = files[:3]
     for p in files:
         d = json.load(open(p))
         tag = f"{d['arch']}__{d['shape']}__{d['mesh']}"

@@ -22,11 +22,20 @@ nothing trainable upstream — zero-duration B items, no W, no
 cotangents flow into the frozen prefix; the paper's frozen-encoder
 shape). ``derived`` reports sim/exec/cap peaks and the W-residual
 peak, the zero-bubble memory-vs-bubble trade-off measured.
+
+A final scenario goes through the typed API: ``repro.parallel.
+search_plan`` picks the joint winner for a small frozen-encoder MLLM
+and its pinned (schedule, virtual_chunks) pair is validated the same
+way — the memory harness covers exactly what ``parallelize`` emits.
 """
 import time
 
+import numpy as np
+
+from repro.core import pipeline as pp
 from repro.core.schedule import (SCHEDULES, Stage, chain_graph,
                                  refine_chain, validate_schedule_memory)
+from repro.parallel import ClusterSpec, WorkloadShape, search_plan
 
 from .common import emit
 
@@ -46,9 +55,40 @@ def build_chain(ranks: int, scenario: str):
     return chain_graph(stages)
 
 
-def run():
+def validate_searched_plan():
+    """End-to-end through the typed API: search the joint winner for a
+    small frozen-encoder MLLM (``repro.parallel.search_plan``), rebuild
+    the winner's simulation graph at its pinned (schedule, v), and
+    cross-check the memory model on the real executor. One row; raises
+    on divergence like every other scenario."""
+    enc = pp.ModuleProfile("vision", np.ones(4) * 2.0, frozen=True)
+    llm = pp.ModuleProfile("llm", np.ones(8) * 1.5, frozen=False,
+                           trainable_upstream=True)
+    plan = search_plan([enc], llm, ClusterSpec(num_devices=4),
+                       WorkloadShape(num_microbatches=MICROBATCHES))
+    graph, _sim = pp.simulate_plan(
+        [enc], llm, list(plan.stage.encoder_stages),
+        plan.stage.llm_stages, MICROBATCHES,
+        schedule=plan.schedule.name,
+        virtual_chunks=(plan.schedule.virtual_chunks,))
+    kwargs = {"virtual_chunks": plan.schedule.virtual_chunks} \
+        if plan.schedule.name in CHUNKED else {}
+    t0 = time.perf_counter()
+    rep = validate_schedule_memory(graph, MICROBATCHES,
+                                   plan.schedule.name, **kwargs)
+    us = (time.perf_counter() - t0) * 1e6
+    emit(f"schedmem/plan-{plan.schedule.name}"
+         f"-d{plan.pp_devices}", us,
+         f"sim_peak={max(rep['simulated_peaks'])};"
+         f"exec_peak={max(rep['executor_peaks'])};"
+         f"cap={max(rep['caps'])};"
+         f"plan_bubble={plan.schedule.bubble_fraction:.3f};match=1")
+    return rep
+
+
+def run(smoke: bool = False):
     rows = []
-    for ranks in (2, 4):
+    for ranks in ((2,) if smoke else (2, 4)):
         for scenario in ("train", "frozen"):
             coarse = build_chain(ranks, scenario)
             fine = refine_chain(coarse, 2)
@@ -71,6 +111,7 @@ def run():
                     f"match=1")
                 emit(name, us, derived)
                 rows.append((name, rep))
+    rows.append(("schedmem/plan", validate_searched_plan()))
     return rows
 
 

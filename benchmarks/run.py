@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [table3 table4 ...]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [table3 table4 ...]
 
 Emits ``name,us_per_call,derived`` CSV rows:
   table3    — frozen-aware vs -unaware pipeline partitioning (§6.4)
@@ -10,12 +10,22 @@ Emits ``name,us_per_call,derived`` CSV rows:
   roofline  — §Roofline terms from the dry-run artifacts
   schedmem  — simulator-vs-executor peak-activation validation for
               every pipeline schedule (fails loudly on divergence)
+
+``--smoke`` shrinks every benchmark to a tiny grid with one repeat —
+seconds, not minutes — so CI can execute all of them on every push and
+the scripts cannot rot silently when the API moves under them. The
+figures a smoke run emits are NOT the paper's numbers; only the full
+grids are.
 """
 import sys
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    argv = list(sys.argv[1:])
+    smoke = "--smoke" in argv
+    if smoke:
+        argv = [a for a in argv if a != "--smoke"]
+    want = set(argv)
 
     def on(name):
         return not want or name in want
@@ -23,22 +33,22 @@ def main() -> None:
     print("name,us_per_call,derived", flush=True)
     if on("table3"):
         from benchmarks import bench_frozen_aware_pp
-        bench_frozen_aware_pp.run()
+        bench_frozen_aware_pp.run(smoke=smoke)
     if on("table2"):
         from benchmarks import bench_modality_parallel
-        bench_modality_parallel.run()
+        bench_modality_parallel.run(smoke=smoke)
     if on("table4"):
         from benchmarks import bench_cp_distribution
-        bench_cp_distribution.run()
+        bench_cp_distribution.run(smoke=smoke)
     if on("kernel"):
         from benchmarks import bench_bam_kernel
-        bench_bam_kernel.run()
+        bench_bam_kernel.run(smoke=smoke)
     if on("roofline"):
         from benchmarks import bench_roofline
-        bench_roofline.run()
+        bench_roofline.run(smoke=smoke)
     if on("schedmem"):
         from benchmarks import bench_schedule_memory
-        bench_schedule_memory.run()
+        bench_schedule_memory.run(smoke=smoke)
 
 
 if __name__ == '__main__':

@@ -1,5 +1,6 @@
 """Quickstart: build a Cornstarch MLLM from unimodal parts (the paper's
-Listing 1), freeze encoders + LLM, train the projectors a few steps.
+Listing 1), freeze encoders + LLM, plan its parallelization with ONE
+typed call, train the projectors a few steps.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,10 +8,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_mllm import llm_config, vision_encoder_config
-from repro.core.modality import (ModalityModule, MultimodalModule,
-                                 MultimodalParallelSpec, ParallelSpec)
+from repro.core.modality import ModalityModule, MultimodalModule
 from repro.data.synthetic import MultimodalDataset
 from repro.optim import optimizer as opt
+from repro.parallel import (ClusterSpec, MLLMParallelPlan, WorkloadShape,
+                            parallelize)
 from repro.training import steps
 
 
@@ -29,13 +31,17 @@ def main():
     mllm.freeze("llm", module=True)
     print("execution DAG antichains:", mllm.independent_sets())
 
-    # 3. parallelization spec (frozen-aware pipeline plan)
-    spec = MultimodalParallelSpec(
-        encoder_specs={"vision": ParallelSpec(pp_size=1)},
-        llm_spec=ParallelSpec(pp_size=2), num_microbatches=8)
-    plan = spec.apply(mllm, text_len=64)
-    print(f"pipeline plan: {len(plan['graph'].stages)} stages, "
-          f"simulated bubble {plan['schedule']['bubble_fraction']:.3f}")
+    # 3. one typed call decides PP stages, pipeline schedule, virtual
+    #    chunks AND the token-balanced CP distribution jointly
+    plan = parallelize(
+        mllm, ClusterSpec(num_devices=3, cp_size=2),
+        WorkloadShape(text_len=64, num_microbatches=8, block_size=8))
+    print(plan.describe())
+    # the plan is plain data: cache it / ship it to a launch script
+    assert MLLMParallelPlan.from_json(plan.to_json()) == plan
+    executor = plan.apply(mllm)     # one-stage-per-device contract
+    print(f"pipeline plan: {len(executor['graph'].stages)} stages, "
+          f"simulated bubble {plan.schedule.bubble_fraction:.3f}")
 
     # 4. train the projector
     params = mllm.init(jax.random.PRNGKey(0))

@@ -1,28 +1,67 @@
-"""End-to-end driver example (deliverable b): trains the ~125M-param
-xlstm-125m on the synthetic LM stream for a few hundred steps via the
-production train driver. On this 1-core CPU container a full run takes
-a while; pass --steps to shorten.
+"""End-to-end driver example (deliverable b): the launch-script flow
+of the typed parallel API. Searches one joint PP x CP plan with
+``parallelize()``, persists it as JSON (what a cluster launch script
+would cache), then trains the reduced paper VLM through the production
+driver under ``--plan`` — the driver reloads and validates the plan
+before any step runs.
 
-    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+    PYTHONPATH=src python examples/train_e2e.py [--steps 120]
+    PYTHONPATH=src python examples/train_e2e.py --arch xlstm-125m  # LM mode
 """
 import argparse
-import sys
+import os
+
+import numpy as np
 
 from repro.launch import train
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--mllm", default="vlm", choices=["vlm", "alm",
+                                                      "valm"])
+    ap.add_argument("--arch", default=None,
+                    help="train an LM architecture instead (no plan)")
     args = ap.parse_args()
-    res = train.main([
-        "--arch", args.arch, "--steps", str(args.steps),
-        "--seq", "128", "--batch", "2", "--vocab", "2048",
-        "--log-every", "10", "--ckpt-dir", "ckpts/e2e",
-    ])
-    assert res["last_loss"] < res["first_loss"], res
-    print("train_e2e OK")
+
+    if args.arch:
+        res = train.main([
+            "--arch", args.arch, "--steps", str(args.steps),
+            "--seq", "128", "--batch", "2", "--vocab", "2048",
+            "--log-every", "10", "--ckpt-dir", "ckpts/e2e",
+        ])
+    else:
+        from repro.models.mllm import build_paper_mllm
+        from repro.parallel import (ClusterSpec, MLLMParallelPlan,
+                                    WorkloadShape, parallelize)
+        seq = 64
+        mllm = build_paper_mllm(args.mllm, reduced=True, text_len=seq)
+        # ft1 fine-tune: frozen encoders + trainable LLM — the
+        # scenario where the zero-bubble schedules' deferred W passes
+        # actually have work (and the loss can actually move)
+        mllm.freeze("llm", module=False)
+        plan = parallelize(
+            mllm, ClusterSpec(num_devices=4, cp_size=2),
+            WorkloadShape(text_len=seq, num_microbatches=8,
+                          microbatch_size=2, block_size=8))
+        print(plan.describe())
+        os.makedirs("ckpts/e2e", exist_ok=True)
+        plan_path = "ckpts/e2e/plan.json"
+        plan.save(plan_path)
+        assert MLLMParallelPlan.load(plan_path) == plan
+        res = train.main([
+            "--mllm", args.mllm, "--reduced", "--steps", str(args.steps),
+            "--seq", str(seq), "--batch", "2", "--lr", "5e-3",
+            "--log-every", "10", "--train-llm",
+            "--plan", plan_path, "--ckpt-dir", "ckpts/e2e",
+        ])
+    # compare logged-loss means, not two noisy point samples
+    losses = res["losses"]
+    head = float(np.mean(losses[:3]))
+    tail = float(np.mean(losses[-3:]))
+    assert tail < head, (head, tail, losses)
+    print(f"train_e2e OK (loss {head:.3f} -> {tail:.3f})")
 
 
 if __name__ == "__main__":

@@ -322,36 +322,29 @@ class MultimodalParallelSpec:
         """Build the pipeline plan: per-module stage partitions (using
         the frozen-aware rule) + the modality-parallel graph + its
         simulated schedule (any core.schedule scheduler). The shard_map
-        executor (core/modality_parallel.py) consumes plan["graph"]."""
+        executor (core/modality_parallel.py) consumes plan["graph"],
+        which always has one stage per simulated device — chunked
+        schedules keep their v-times finer simulation for bubble
+        accounting but fold the executor graph back to the planned
+        partition.
+
+        Superseded by ``repro.parallel``: ``parallelize()`` searches
+        the allocation instead of taking it as given, and
+        ``MLLMParallelPlan.apply`` replays a recorded plan — both
+        share this method's fold-back construction
+        (``repro.parallel.build_executor_plan``)."""
+        from repro.parallel.plan import build_executor_plan
         assert set(self.encoder_specs) == set(mllm.encoders)
         encs, llm = mllm.profiles(text_len, batch=self.microbatch_size)
         enc_counts = [self.encoder_specs[e.name].pp_size for e in encs]
-        # simulate_plan keeps one device per planned stage under every
-        # schedule (chunked schedules fold their virtual chunks back
-        # onto the same devices), so the simulated device count always
-        # matches this spec's pp allocation
-        graph, sim = pp.simulate_plan(
+        out = build_executor_plan(
             encs, llm, enc_counts, self.llm_spec.pp_size,
             self.num_microbatches, schedule=self.schedule,
-            frozen_aware=self.frozen_aware,
-            virtual_chunks=self.virtual_chunks)
-        if len(graph.stages) != sim["num_devices"]:
-            # a chunked schedule won with a v-times finer partition; the
-            # executor contract is one stage per device, so plan["graph"]
-            # folds back to the planned partition (the sim keeps the
-            # finer graph's bubble accounting)
-            llm_k = min(self.llm_spec.pp_size, len(llm.layer_fwd))
-            counts = [min(k, len(e.layer_fwd))
-                      for e, k in zip(encs, enc_counts)]
-            graph = pp.build_modality_parallel(
-                encs, llm, counts, llm_k, frozen_aware=self.frozen_aware)
-        return {
-            "graph": graph,
-            "encoder_profiles": encs,
-            "llm_profile": llm,
-            "schedule": sim,
-            "schedule_name": sim["schedule"],
-            "virtual_chunks": sim["virtual_chunks"],
-            "devices": sum(s.devices for s in self.encoder_specs.values())
-            + self.llm_spec.devices,
-        }
+            virtual_chunks=self.virtual_chunks,
+            frozen_aware=self.frozen_aware)
+        # legacy accounting: tp x cp x pp of every spec, not just the
+        # simulated pipeline ranks
+        out["devices"] = sum(s.devices
+                             for s in self.encoder_specs.values()) \
+            + self.llm_spec.devices
+        return out

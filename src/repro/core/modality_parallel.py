@@ -321,40 +321,93 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     }
 
 
-def schedule_from_plan(plan: Optional[Dict[str, Any]]) -> str:
-    """The pipeline schedule picked for a plan: ``auto_parallelize``
-    results carry the winning name under "schedule";
-    ``MultimodalParallelSpec.apply`` plans carry the simulation dict
-    there and the name under "schedule_name". Defaults to classic
-    1F1B."""
-    plan = plan or {}
+def _is_typed_plan(plan: Any) -> bool:
+    from repro.parallel.plan import MLLMParallelPlan
+    return isinstance(plan, MLLMParallelPlan)
+
+
+def _dict_schedule_name(plan: Dict[str, Any]) -> Optional[str]:
+    """The schedule name a legacy plan dict carries, if any:
+    ``auto_parallelize`` results keep it under "schedule",
+    ``MultimodalParallelSpec.apply`` plans keep the sim dict there and
+    the name under "schedule_name"."""
     name = plan.get("schedule")
     if not isinstance(name, str):
         name = plan.get("schedule_name")
-    return name if isinstance(name, str) and name else "1f1b"
+    return name if isinstance(name, str) else None
 
 
-def virtual_chunks_from_plan(plan: Optional[Dict[str, Any]]) -> int:
-    """The winning virtual-chunk count of a plan: both
-    ``auto_parallelize`` results and ``MultimodalParallelSpec.apply``
-    plans carry it under "virtual_chunks" (the simulator tags every
-    run). Defaults to 1 — one chunk per device, the executor's plain
-    placement."""
-    plan = plan or {}
-    v = plan.get("virtual_chunks")
-    return int(v) if isinstance(v, int) and v >= 1 else 1
+def schedule_from_plan(plan: Any) -> str:
+    """DEPRECATED shim — read ``plan.schedule.name`` off an
+    ``MLLMParallelPlan`` instead. Accepts the typed plan, the two
+    legacy dict flavors (``auto_parallelize`` result /
+    ``MultimodalParallelSpec.apply``), or None (no plan -> classic
+    1F1B). A dict that carries no recognizable schedule, or a name
+    outside ``core.schedule.SCHEDULES``, raises ``ValueError`` — the
+    silent-1F1B default masked genuinely malformed plans."""
+    import warnings
+    warnings.warn(
+        "schedule_from_plan is deprecated; use "
+        "repro.parallel.MLLMParallelPlan and plan.schedule.name",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.schedule import SCHEDULES
+    if plan is None:
+        return "1f1b"
+    if _is_typed_plan(plan):
+        return plan.schedule.name
+    if isinstance(plan, dict):
+        name = _dict_schedule_name(plan)
+        if name in SCHEDULES:
+            return name
+        raise ValueError(
+            f"plan carries no recognizable schedule (got {name!r}, "
+            f"valid: {SCHEDULES}); pass an MLLMParallelPlan, an "
+            "auto_parallelize result, or a MultimodalParallelSpec."
+            "apply dict")
+    raise ValueError(f"not a plan: {type(plan).__name__!r}")
+
+
+def virtual_chunks_from_plan(plan: Any) -> int:
+    """DEPRECATED shim — read ``plan.schedule.virtual_chunks`` off an
+    ``MLLMParallelPlan`` instead. Same accepted flavors as
+    ``schedule_from_plan``; a recognized plan without the tag (both
+    legacy flavors always carry it) defaults to 1, anything malformed
+    raises ``ValueError``."""
+    import warnings
+    warnings.warn(
+        "virtual_chunks_from_plan is deprecated; use "
+        "repro.parallel.MLLMParallelPlan and "
+        "plan.schedule.virtual_chunks",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.schedule import SCHEDULES
+    if plan is None:
+        return 1
+    if _is_typed_plan(plan):
+        return plan.schedule.virtual_chunks
+    if isinstance(plan, dict):
+        v = plan.get("virtual_chunks")
+        if isinstance(v, int) and v >= 1:
+            return v
+        if v is None and _dict_schedule_name(plan) in SCHEDULES:
+            return 1
+        raise ValueError(f"plan carries no usable virtual_chunks "
+                         f"(got {v!r})")
+    raise ValueError(f"not a plan: {type(plan).__name__!r}")
 
 
 def split_devices(mllm, devices: Sequence[Any],
-                  plan: Optional[Dict[str, Any]] = None) -> Dict[str, list]:
+                  plan: Any = None) -> Dict[str, list]:
     """Assign device counts per module (default: 1 per encoder, rest to
-    the LLM). ``plan`` is either {encoder_name: count} or the result
-    dict of ``core.pipeline.auto_parallelize``, whose per-encoder stage
-    counts are matched by the "encoder_names" it carries. The winning
-    schedule travels separately — read it with ``schedule_from_plan``
-    (this dict stays purely {module: device list})."""
+    the LLM). ``plan`` is an ``MLLMParallelPlan`` (the typed API), a
+    plain {encoder_name: count} dict, or the legacy result dict of
+    ``core.pipeline.auto_parallelize``, whose per-encoder stage counts
+    are matched by the "encoder_names" it carries. The winning schedule
+    travels on the typed plan (``plan.schedule``); this dict stays
+    purely {module: device list}."""
     devices = list(devices)
-    if plan and "encoder_stages" in plan:     # auto_parallelize result
+    if _is_typed_plan(plan):
+        plan = plan.stage_counts_by_name()
+    elif plan and "encoder_stages" in plan:   # auto_parallelize result
         names = plan.get("encoder_names") or sorted(mllm.encoders)
         plan = dict(zip(names, plan["encoder_stages"]))
     plan = plan or {name: 1 for name in mllm.encoders}

@@ -205,10 +205,24 @@ def _chunk_candidates(schedule: str, virtual_chunks) -> Tuple[int, ...]:
     """Virtual-chunk counts a schedule searches over. ``virtual_chunks``
     is an int ceiling (legacy: try v, v-1, ..., 1) or an explicit
     sequence of candidates. zb-v places exactly two chunks per device,
-    so its candidate set is always {2, 1}; the unchunked schedules pin
-    v = 1."""
+    so its candidate set is {2, 1} (an explicit sequence can pin it to
+    one of those — how ``MLLMParallelPlan.apply`` replays a recorded
+    winner deterministically); the unchunked schedules pin v = 1."""
     if schedule == "zb-v":
-        return (2, 1)
+        if isinstance(virtual_chunks, int):
+            return (2, 1)
+        vs = tuple(v for v in (2, 1)
+                   if v in {int(x) for x in virtual_chunks})
+        if not vs:
+            # an explicit candidate set is a pin (MLLMParallelPlan.
+            # apply replaying a recorded winner) — silently widening
+            # it back to {2, 1} would execute a different placement
+            # than the plan records
+            raise ValueError(
+                f"zb-v places two chunks per device: explicit "
+                f"virtual_chunks must come from {{1, 2}}, got "
+                f"{tuple(virtual_chunks)!r}")
+        return vs
     if schedule != "interleaved":
         return (1,)
     if isinstance(virtual_chunks, int):
@@ -387,21 +401,41 @@ def simulate_fused_chain(modules: Sequence[ModuleProfile],
 # Algorithm 1: loosely-coupled multimodal auto-parallelization
 # ---------------------------------------------------------------------------
 
+#: candidate-ranking objectives for auto_parallelize: maximize
+#: throughput per device (the paper's), or minimize time / bubble
+AUTO_OBJECTIVES = ("tput_per_device", "iteration_time",
+                   "bubble_fraction")
+
+
+def _beats(cand: dict, best: dict, objective: str) -> bool:
+    if objective == "tput_per_device":
+        return cand["tput_per_device"] > best["tput_per_device"]
+    return cand[objective] < best[objective]
+
+
 def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
                      total_devices: int, num_microbatches: int,
                      *, frozen_aware: bool = True,
                      max_llm_stages: Optional[int] = None,
                      schedules: Sequence[str] = SCHEDULES,
-                     virtual_chunks: Sequence[int] = (1, 2, 4)) -> dict:
+                     virtual_chunks: Sequence[int] = (1, 2, 4),
+                     objective: str = "tput_per_device") -> dict:
     """For each feasible LLM stage count i: partition the LLM, derive the
     per-stage time target t_i, fit each encoder to that target, simulate
     every candidate (schedule, virtual-chunk count) pair, return the
     best combination (paper Algorithm 1, extended to search schedules
     and chunking jointly). ``virtual_chunks`` is the candidate v set
     for the interleaved schedule (zb-v always searches {2, 1}; 1f1b
-    and zb-h1 pin v = 1). The result dict carries the winning schedule
-    name under ``"schedule"`` and the winning chunk count under
+    and zb-h1 pin v = 1). ``objective`` ranks candidates:
+    ``"tput_per_device"`` (default, maximized) or ``"iteration_time"``
+    / ``"bubble_fraction"`` (minimized — these spend every device the
+    budget allows, where throughput/device prefers small footprints).
+    The result dict carries the winning schedule name under
+    ``"schedule"`` and the winning chunk count under
     ``"virtual_chunks"``."""
+    if objective not in AUTO_OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; pick from "
+                         f"{AUTO_OBJECTIVES}")
     best = None
     max_llm = max_llm_stages or min(len(llm.layer_fwd),
                                     total_devices - len(encoders))
@@ -428,8 +462,12 @@ def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
             if sched == "interleaved":
                 candidates += [(sched, (v,))
                                for v in virtual_chunks if fits(v)]
-            else:            # zb-v expands to {2, 1} internally
-                candidates.append((sched, virtual_chunks))
+            else:
+                # the int sentinel means "schedule default": zb-v
+                # searches its inherent {2, 1}; 1f1b/zb-h1 pin v = 1.
+                # The interleaved-specific candidate tuple must not
+                # leak here (e.g. (4,) would be an invalid zb-v pin)
+                candidates.append((sched, 2))
         for sched, vs in candidates:
             g, sim = simulate_plan(encoders, llm, enc_counts, i,
                                    num_microbatches, schedule=sched,
@@ -442,8 +480,7 @@ def auto_parallelize(encoders: Sequence[ModuleProfile], llm: ModuleProfile,
                     "devices": devices,
                     "tput_per_device": num_microbatches /
                     (sim["iteration_time"] * devices)}
-            if best is None or cand["tput_per_device"] > \
-                    best["tput_per_device"]:
+            if best is None or _beats(cand, best, objective):
                 best = cand
     assert best is not None, "no feasible configuration"
     return best

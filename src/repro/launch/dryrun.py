@@ -9,6 +9,9 @@ on the production meshes and extract memory / cost / collective stats.
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
         --shape train_4k [--multipod] [--out experiments/dryrun]
     PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --plan-mllm all
+        # ^ plan mode: emit MLLMParallelPlan JSONs (repro.parallel)
+        #   instead of lowering — the artifacts train.py --plan loads
 
 Per combination this produces <out>/<arch>__<shape>__<mesh>.json with:
   memory_analysis   (bytes per device: args/output/temp/code)
@@ -261,6 +264,31 @@ def _lower_inner(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
     }
 
 
+def emit_plans(args) -> int:
+    """Plan mode: search the joint PP x CP decision for the paper
+    MLLMs through the typed API and persist each winner as
+    ``<out>/plan__<kind>__d<devices>__cp<ranks>.json`` — the cached-
+    search artifacts ``repro.launch.train --plan`` consumes."""
+    from repro.models.mllm import build_paper_mllm
+    from repro.parallel import ClusterSpec, WorkloadShape, parallelize
+    kinds = [args.plan_mllm] if args.plan_mllm != "all" \
+        else ["vlm", "alm", "valm"]
+    for kind in kinds:
+        mllm = build_paper_mllm(kind)
+        plan = parallelize(
+            mllm, ClusterSpec(num_devices=args.plan_devices,
+                              cp_size=args.cp_size),
+            WorkloadShape(text_len=args.plan_text_len,
+                          num_microbatches=args.plan_microbatches))
+        path = os.path.join(
+            args.out, f"plan__{kind}__d{args.plan_devices}"
+            f"__cp{args.cp_size}.json")
+        plan.save(path)
+        print(f"[plan] {path}")
+        print(plan.describe())
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -270,9 +298,18 @@ def main(argv=None):
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
+    # plan mode: emit MLLMParallelPlan JSONs instead of lowering
+    ap.add_argument("--plan-mllm", default=None,
+                    choices=[None, "vlm", "alm", "valm", "all"])
+    ap.add_argument("--plan-devices", type=int, default=8)
+    ap.add_argument("--cp-size", type=int, default=8)
+    ap.add_argument("--plan-text-len", type=int, default=1024)
+    ap.add_argument("--plan-microbatches", type=int, default=8)
     args = ap.parse_args(argv)
 
     os.makedirs(args.out, exist_ok=True)
+    if args.plan_mllm:
+        return emit_plans(args)
     if args.all:
         pairs = [(a, s) for a in list_archs() for s in SHAPES]
     else:

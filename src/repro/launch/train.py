@@ -9,7 +9,11 @@ Two modes:
     stream (repro.data.synthetic.TextLMDataset).
   * MLLM mode (``--mllm vlm|alm|valm``): the Cornstarch path — frozen
     encoders + LLM, trainable projectors, multimodal batches; the
-    frozen mask drives both stop_gradient and optimizer masking.
+    frozen mask drives both stop_gradient and optimizer masking. The
+    parallelization decision is a typed ``MLLMParallelPlan``
+    (repro.parallel): load a cached one with ``--plan plan.json``, or
+    let the driver search one (``--plan-devices`` / ``--cp-size`` /
+    ``--microbatches``) and persist it with ``--plan-out``.
 
 Runs on whatever devices exist (data-parallel over the host mesh when
 more than one); this is the driver the smoke/e2e examples call into.
@@ -61,13 +65,52 @@ def train_lm(args) -> dict:
                   step=args.steps)
         print(f"saved checkpoint to {args.ckpt_dir}")
     return {"params": n_params, "first_loss": losses[0],
-            "last_loss": losses[-1]}
+            "last_loss": losses[-1], "losses": losses}
+
+
+def resolve_plan(mllm, args):
+    """The MLLMParallelPlan this run trains under: loaded from
+    ``--plan`` (a launch script's cached search) or searched fresh via
+    ``parallelize`` — the single typed entrypoint for the joint
+    PP x CP decision. ``--plan-out`` persists it for the next launch."""
+    from repro.parallel import (ClusterSpec, MLLMParallelPlan,
+                                WorkloadShape, parallelize)
+    if args.plan:
+        plan = MLLMParallelPlan.load(args.plan)
+    else:
+        # paper block size at paper lengths; on reduced sequences keep
+        # at least ~2 blocks per CP rank so the balancer has choices
+        block = min(128, max(8, mllm.merged_length(args.seq)
+                             // (2 * args.cp_size)))
+        plan = parallelize(
+            mllm, ClusterSpec(num_devices=args.plan_devices,
+                              cp_size=args.cp_size),
+            WorkloadShape(text_len=args.seq,
+                          num_microbatches=args.microbatches,
+                          microbatch_size=args.batch,
+                          block_size=block))
+    # instantiating the plan validates it against THIS mllm (stage
+    # counts vs layer counts, encoder set) before any step runs
+    executor = plan.apply(mllm, text_len=args.seq)
+    if args.plan_out:
+        plan.save(args.plan_out)
+        print(f"saved plan to {args.plan_out}")
+    return plan, executor
 
 
 def train_mllm(args) -> dict:
     from repro.models.mllm import build_paper_mllm
     mllm = build_paper_mllm(args.mllm, reduced=args.reduced,
                             text_len=args.seq)
+    if args.train_llm:
+        # the paper's ft1 fine-tune: frozen encoders, trainable LLM —
+        # the scenario where zero-bubble W passes have work to defer
+        mllm.freeze("llm", module=False)
+    plan, executor = resolve_plan(mllm, args)
+    print(plan.describe())
+    print(f"executor graph: {len(executor['graph'].stages)} stages, "
+          f"simulated bubble "
+          f"{executor['schedule']['bubble_fraction']:.3f}")
     params = mllm.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
@@ -94,13 +137,14 @@ def train_mllm(args) -> dict:
             print(f"step {i:5d} loss {loss:.4f} "
                   f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
     if args.ckpt_dir:
-        frozen_paths = {"llm"} | {
-            f"encoders/{n}/module" for n in mllm.encoders}
+        frozen_paths = {f"encoders/{n}/module" for n in mllm.encoders}
+        if not args.train_llm:
+            frozen_paths.add("llm")
         ckpt.save(args.ckpt_dir, params, step=args.steps)
         print(f"saved checkpoint to {args.ckpt_dir} "
               f"(frozen paths: {sorted(frozen_paths)})")
     return {"params": n_params, "first_loss": losses[0],
-            "last_loss": losses[-1]}
+            "last_loss": losses[-1], "losses": losses}
 
 
 def main(argv=None):
@@ -117,6 +161,19 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    # MLLM-mode parallelization plan (repro.parallel typed API)
+    ap.add_argument("--plan", default=None,
+                    help="MLLMParallelPlan JSON to train under "
+                    "(default: search one via parallelize())")
+    ap.add_argument("--plan-out", default=None,
+                    help="write the resolved plan JSON here")
+    ap.add_argument("--plan-devices", type=int, default=8,
+                    help="pipeline device budget for the plan search")
+    ap.add_argument("--cp-size", type=int, default=1,
+                    help="context-parallel ranks for the plan search")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--train-llm", action="store_true",
+                    help="MLLM mode: unfreeze the LLM (ft1 fine-tune)")
     args = ap.parse_args(argv)
     assert (args.arch is None) != (args.mllm is None), \
         "pass exactly one of --arch / --mllm"

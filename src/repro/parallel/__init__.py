@@ -1,0 +1,18 @@
+"""repro.parallel — the single typed parallelization API surface.
+
+    from repro.parallel import (ClusterSpec, WorkloadShape, parallelize)
+    plan = parallelize(mllm, ClusterSpec(8, cp_size=8),
+                       WorkloadShape(text_len=1024))
+    plan.save("plan.json")              # launch scripts / cached searches
+    executor = plan.apply(mllm)         # one-stage-per-device contract
+
+See ``docs/api.md`` for the full tour. ``plan`` holds the data model
+(:class:`MLLMParallelPlan` and its components), ``api`` the search
+entrypoints (:func:`parallelize`, :func:`search_plan`,
+:func:`plan_context`).
+"""
+from .plan import (ClusterSpec, ContextPlan,  # noqa: F401
+                   MLLMParallelPlan, PLAN_FORMAT_VERSION, SchedulePlan,
+                   StagePlan, WorkloadShape, build_executor_plan)
+from .api import (OBJECTIVES, mllm_workload_bits,  # noqa: F401
+                  parallelize, plan_context, search_plan)

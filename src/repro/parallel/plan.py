@@ -1,0 +1,365 @@
+"""Typed parallelization plans: the single object every launch path
+shares.
+
+Cornstarch's user-facing contribution is ONE plugin-style API that
+jointly decides frozen-aware pipeline parallelism (§4.2, Algorithm 1)
+and token-workload-balanced context parallelism (§4.3) for a
+heterogeneous MLLM. This module is that API's data model:
+
+    MLLMParallelPlan
+    ├── StagePlan      per-module pipeline stage/device assignment
+    │                  (the Algorithm-1 partition decision)
+    ├── SchedulePlan   pipeline schedule name + virtual-chunk count +
+    │                  the simulator's verdict (iteration time, bubble,
+    │                  per-device peak activations)
+    └── ContextPlan    CP balancer choice + block->rank assignment
+                       (wraps core.distribution.Plan)
+
+plus the typed inputs (:class:`ClusterSpec`, :class:`WorkloadShape`)
+consumed by :func:`repro.parallel.api.parallelize`.
+
+Plans are *plain data*: frozen dataclasses of tuples/ints/floats/strs
+that round-trip losslessly through ``to_json()`` / ``from_json()`` (for
+launch scripts and cached searches) and compare by value, so a golden
+plan recorded under ``tests/data/`` pins the search's behavior.
+
+``plan.apply(mllm)`` turns a plan back into the executor contract the
+runtime consumes (the role ``MultimodalParallelSpec.apply`` used to
+play): it re-partitions the module profiles at the planned stage
+counts, re-simulates the pinned (schedule, virtual_chunks) pair, and
+returns a dict whose ``"graph"`` always has one stage per device —
+chunked schedules keep their finer simulation for bubble accounting
+but fold the executor graph back to the planned partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import distribution as dist
+from repro.core import pipeline as pp
+from repro.core.schedule import SCHEDULES
+
+PLAN_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Typed inputs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """The device budget a plan is searched against.
+
+    num_devices: pipeline ranks available to Algorithm 1 (each planned
+        stage occupies one).
+    cp_size: context-parallel ranks the token workload is balanced
+        over (1 = no CP; the ContextPlan is still computed so the
+        makespan/imbalance figures are reportable).
+    """
+    num_devices: int
+    cp_size: int = 1
+
+    def __post_init__(self):
+        assert self.num_devices >= 1 and self.cp_size >= 1, self
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadShape:
+    """The training workload a plan is searched for."""
+    text_len: int = 1024
+    num_microbatches: int = 8
+    microbatch_size: int = 1
+    block_size: int = 128           # CP token-block granularity
+
+    def __post_init__(self):
+        assert self.text_len >= 1 and self.num_microbatches >= 1, self
+        assert self.microbatch_size >= 1 and self.block_size >= 1, self
+
+
+# ---------------------------------------------------------------------------
+# Plan components
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """Per-module pipeline stage counts — one device per stage
+    (chunked schedules fold their virtual chunks onto these devices)."""
+    encoder_names: Tuple[str, ...]
+    encoder_stages: Tuple[int, ...]
+    llm_stages: int
+    frozen_aware: bool = True
+
+    def __post_init__(self):
+        assert len(self.encoder_names) == len(self.encoder_stages), self
+        assert self.llm_stages >= 1, self
+        assert all(k >= 1 for k in self.encoder_stages), self
+
+    @property
+    def num_devices(self) -> int:
+        return self.llm_stages + sum(self.encoder_stages)
+
+    def counts_by_name(self) -> Dict[str, int]:
+        """{module: stage count} — the mapping ``split_devices``
+        consumes."""
+        return dict(zip(self.encoder_names, self.encoder_stages))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """The winning pipeline schedule and the simulator's verdict on
+    it (the numbers Algorithm 1 compared candidates by)."""
+    name: str
+    virtual_chunks: int
+    num_microbatches: int
+    iteration_time: float
+    bubble_fraction: float
+    num_devices: int
+    peak_activations_per_device: Tuple[int, ...]
+    tput_per_device: float
+
+    def __post_init__(self):
+        assert self.name in SCHEDULES, \
+            f"unknown schedule {self.name!r}; pick from {SCHEDULES}"
+        assert self.virtual_chunks >= 1, self
+        assert self.name != "zb-v" or self.virtual_chunks in (1, 2), \
+            f"zb-v places two chunks per device; v={self.virtual_chunks}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContextPlan:
+    """Context-parallel token distribution: the chosen balancer and
+    its block -> rank assignment (a typed, serializable wrapper over
+    ``core.distribution.Plan``)."""
+    method: str
+    num_ranks: int
+    block_size: int
+    assignment: Tuple[int, ...]     # block index -> CP rank
+    loads: Tuple[float, ...]        # per-rank workload
+
+    def __post_init__(self):
+        assert self.method in dist.PLANNERS, \
+            f"unknown balancer {self.method!r}; " \
+            f"pick from {sorted(dist.PLANNERS)}"
+        assert len(self.loads) == self.num_ranks, self
+
+    @classmethod
+    def from_core(cls, plan: dist.Plan, method: str) -> "ContextPlan":
+        return cls(method=method, num_ranks=plan.num_ranks,
+                   block_size=plan.block_size,
+                   assignment=tuple(int(a) for a in plan.assignment),
+                   loads=tuple(float(l) for l in plan.loads))
+
+    def core_plan(self) -> dist.Plan:
+        """The ``core.distribution.Plan`` this wraps (for the CP
+        runtime: ``plan_permutation`` / ``apply_plan``)."""
+        return dist.Plan(assignment=np.array(self.assignment, np.int32),
+                         block_size=self.block_size,
+                         num_ranks=self.num_ranks,
+                         loads=np.array(self.loads, np.float64))
+
+    @property
+    def makespan(self) -> float:
+        return max(self.loads)
+
+    @property
+    def imbalance(self) -> float:
+        mean = sum(self.loads) / len(self.loads)
+        return max(self.loads) / mean if mean > 0 else 1.0
+
+    def rank_token_slices(self):
+        """Per-rank token index arrays (plan layout)."""
+        return self.core_plan().rank_token_slices()
+
+
+# ---------------------------------------------------------------------------
+# Executor-contract construction (shared by MLLMParallelPlan.apply and
+# the deprecated MultimodalParallelSpec.apply)
+# ---------------------------------------------------------------------------
+
+def build_executor_plan(encoders: Sequence[pp.ModuleProfile],
+                        llm: pp.ModuleProfile,
+                        enc_counts: Sequence[int], llm_stages: int,
+                        num_microbatches: int, *,
+                        schedule: str = "1f1b", virtual_chunks: Any = 2,
+                        frozen_aware: bool = True) -> Dict[str, Any]:
+    """Partition + simulate one stage allocation and return the
+    executor contract: a dict whose ``"graph"`` always has one stage
+    per simulated device. Chunked schedules (interleaved, zb-v) may
+    win with a v-times finer simulation graph; its bubble accounting
+    is kept under ``"schedule"`` while the executor graph folds back
+    to the planned one-stage-per-device partition."""
+    graph, sim = pp.simulate_plan(
+        encoders, llm, enc_counts, llm_stages, num_microbatches,
+        schedule=schedule, frozen_aware=frozen_aware,
+        virtual_chunks=virtual_chunks)
+    if len(graph.stages) != sim["num_devices"]:
+        llm_k = min(llm_stages, len(llm.layer_fwd))
+        counts = [min(k, len(e.layer_fwd))
+                  for e, k in zip(encoders, enc_counts)]
+        graph = pp.build_modality_parallel(
+            encoders, llm, counts, llm_k, frozen_aware=frozen_aware)
+    return {
+        "graph": graph,
+        "encoder_profiles": list(encoders),
+        "llm_profile": llm,
+        "schedule": sim,
+        "schedule_name": sim["schedule"],
+        "virtual_chunks": sim["virtual_chunks"],
+        "devices": sim["num_devices"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# The composed plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLLMParallelPlan:
+    """One joint PP x CP parallelization decision for one MLLM and one
+    workload — the value :func:`repro.parallel.parallelize` returns
+    and every launch path consumes."""
+    stage: StagePlan
+    schedule: SchedulePlan
+    context: Optional[ContextPlan]
+    text_len: int
+    microbatch_size: int = 1
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self, indent: Optional[int] = None) -> str:
+        d = {
+            "format_version": PLAN_FORMAT_VERSION,
+            "stage": dataclasses.asdict(self.stage),
+            "schedule": dataclasses.asdict(self.schedule),
+            "context": dataclasses.asdict(self.context)
+            if self.context is not None else None,
+            "workload": {"text_len": self.text_len,
+                         "microbatch_size": self.microbatch_size},
+        }
+        return json.dumps(d, indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "MLLMParallelPlan":
+        d = json.loads(s)
+        version = d.get("format_version")
+        if version != PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported plan format_version {version!r} "
+                f"(this build reads {PLAN_FORMAT_VERSION})")
+        try:
+            st = d["stage"]
+            stage = StagePlan(
+                encoder_names=tuple(st["encoder_names"]),
+                encoder_stages=tuple(int(k) for k in st["encoder_stages"]),
+                llm_stages=int(st["llm_stages"]),
+                frozen_aware=bool(st["frozen_aware"]))
+            sc = d["schedule"]
+            schedule = SchedulePlan(
+                name=sc["name"],
+                virtual_chunks=int(sc["virtual_chunks"]),
+                num_microbatches=int(sc["num_microbatches"]),
+                iteration_time=float(sc["iteration_time"]),
+                bubble_fraction=float(sc["bubble_fraction"]),
+                num_devices=int(sc["num_devices"]),
+                peak_activations_per_device=tuple(
+                    int(p) for p in sc["peak_activations_per_device"]),
+                tput_per_device=float(sc["tput_per_device"]))
+            cx = d["context"]
+            context = None if cx is None else ContextPlan(
+                method=cx["method"], num_ranks=int(cx["num_ranks"]),
+                block_size=int(cx["block_size"]),
+                assignment=tuple(int(a) for a in cx["assignment"]),
+                loads=tuple(float(l) for l in cx["loads"]))
+            wl = d["workload"]
+            return cls(stage=stage, schedule=schedule, context=context,
+                       text_len=int(wl["text_len"]),
+                       microbatch_size=int(wl["microbatch_size"]))
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"malformed MLLMParallelPlan JSON: {e}") \
+                from e
+
+    def save(self, path: str) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(self.to_json(indent=1) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "MLLMParallelPlan":
+        with open(path, encoding="utf-8") as f:
+            return cls.from_json(f.read())
+
+    # -- derived views -----------------------------------------------------
+    @property
+    def pp_devices(self) -> int:
+        return self.stage.num_devices
+
+    @property
+    def cp_ranks(self) -> int:
+        return self.context.num_ranks if self.context is not None else 1
+
+    @property
+    def total_devices(self) -> int:
+        """Pipeline ranks x CP group size (the full-mesh footprint)."""
+        return self.pp_devices * self.cp_ranks
+
+    def stage_counts_by_name(self) -> Dict[str, int]:
+        """{module: pipeline stage count} — what ``split_devices``
+        consumes to hand out device lists."""
+        return self.stage.counts_by_name()
+
+    # -- executor contract -------------------------------------------------
+    def apply(self, mllm, text_len: Optional[int] = None
+              ) -> Dict[str, Any]:
+        """Instantiate the plan against ``mllm``: re-derive the module
+        profiles, partition at the planned stage counts, re-simulate
+        the PINNED (schedule, virtual_chunks) pair, and return the
+        executor contract (see :func:`build_executor_plan`). Replaces
+        ``MultimodalParallelSpec.apply``."""
+        names = tuple(sorted(mllm.encoders))
+        assert names == tuple(sorted(self.stage.encoder_names)), \
+            (f"plan was searched for encoders "
+             f"{sorted(self.stage.encoder_names)}, "
+             f"mllm has {list(names)}")
+        encs, llm = mllm.profiles(text_len or self.text_len,
+                                  batch=self.microbatch_size)
+        counts = self.stage.counts_by_name()
+        out = build_executor_plan(
+            encs, llm, [counts[e.name] for e in encs],
+            self.stage.llm_stages, self.schedule.num_microbatches,
+            schedule=self.schedule.name,
+            virtual_chunks=(self.schedule.virtual_chunks,),
+            frozen_aware=self.stage.frozen_aware)
+        out["plan"] = self
+        out["context"] = self.context
+        return out
+
+    # -- human-readable dump -----------------------------------------------
+    def describe(self) -> str:
+        lines = [
+            f"MLLMParallelPlan (text_len={self.text_len}, "
+            f"microbatch_size={self.microbatch_size})",
+            f"  stages : llm={self.stage.llm_stages}"
+            + "".join(f", {n}={k}" for n, k in
+                      zip(self.stage.encoder_names,
+                          self.stage.encoder_stages))
+            + f"  ({self.stage.num_devices} pipeline ranks, "
+            f"frozen_aware={self.stage.frozen_aware})",
+            f"  sched  : {self.schedule.name} "
+            f"(v={self.schedule.virtual_chunks}, "
+            f"microbatches={self.schedule.num_microbatches}) "
+            f"bubble={self.schedule.bubble_fraction:.3f} "
+            f"peak_act={list(self.schedule.peak_activations_per_device)}",
+        ]
+        if self.context is not None:
+            c = self.context
+            lines.append(
+                f"  cp     : {c.method} over {c.num_ranks} ranks "
+                f"(block={c.block_size}, blocks={len(c.assignment)}) "
+                f"imbalance={c.imbalance:.3f}")
+        else:
+            lines.append("  cp     : none")
+        lines.append(f"  devices: {self.pp_devices} pp x "
+                     f"{self.cp_ranks} cp = {self.total_devices}")
+        return "\n".join(lines)

@@ -123,6 +123,62 @@ def test_lpt_within_433_of_optimal(W):
     assert greedy.makespan <= opt.makespan * (4 / 3) + 1e-9
 
 
+@st.composite
+def cp_plan_cases(draw):
+    """(block workloads, ranks, block size) with the total token count
+    divisible by the rank count — the CP layout invariant
+    ``plan_permutation`` equalizes per-rank token counts under."""
+    G = draw(st.integers(2, 4))
+    bs = draw(st.sampled_from([1, 2, 4]))
+    nb = G * draw(st.integers(1, 4))
+    W = np.array(draw(st.lists(st.floats(0.1, 50.0, allow_nan=False),
+                               min_size=nb, max_size=nb)))
+    return W, G, bs
+
+
+@given(cp_plan_cases())
+@settings(max_examples=15, deadline=None)
+def test_cp_plan_permutation_roundtrips(case):
+    """For EVERY balancer (the exact ILP included): the CP layout
+    permutation is a true permutation of the token axis, and
+    apply_plan followed by its inverse is the identity on arbitrary
+    token layouts — the property the whole permute/shard/unpermute CP
+    pipeline rests on."""
+    from repro.core import context_parallel as cp
+    W, G, bs = case
+    T = len(W) * bs
+    key = jax.random.PRNGKey(int(W.sum() * 1e3) % (2 ** 31))
+    tree = {
+        "tokens": jnp.arange(T, dtype=jnp.int32)[None],
+        "embeds": jax.random.normal(key, (1, T, 3)),
+    }
+    for method in ("zigzag", "ring", "lpt", "ilp"):
+        kw = {"node_limit": 20_000} if method == "ilp" else {}
+        plan = dist.PLANNERS[method](W, G, bs, **kw)
+        perm = cp.plan_permutation(plan, T)
+        assert sorted(perm.tolist()) == list(range(T)), method
+        inv = cp.invert_perm(perm)
+        assert sorted(inv.tolist()) == list(range(T)), method
+        layout = cp.apply_plan(tree, perm)
+        back = cp.apply_plan(layout, inv)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]),
+                                          err_msg=method)
+        # the permuted layout is rank-contiguous with equal token
+        # counts, and rank r's slice starts with its own assigned
+        # tokens (count-rebalancing only trims a rank's tail and
+        # refills from over-full ranks' surpluses, never reorders the
+        # kept prefix)
+        per_rank = np.asarray(perm).reshape(G, T // G)
+        slices = plan.rank_token_slices()
+        target = T // G
+        for r, sl in enumerate(per_rank):
+            keep = slices[r][:target]
+            np.testing.assert_array_equal(sl[:len(keep)], keep,
+                                          err_msg=method)
+
+
 # ---------------------------------------------------------------------------
 # Partitioner DP
 # ---------------------------------------------------------------------------

@@ -421,7 +421,8 @@ def test_parallel_spec_graph_stays_one_stage_per_device():
         plan = spec.apply(mllm, text_len=256)
         assert len(plan["graph"].stages) == \
             plan["schedule"]["num_devices"], schedule
-        assert schedule_from_plan(plan) == schedule
+        with pytest.warns(DeprecationWarning):
+            assert schedule_from_plan(plan) == schedule
 
 
 def test_split_devices_accepts_auto_parallelize_plan():
@@ -440,9 +441,35 @@ def test_split_devices_accepts_auto_parallelize_plan():
     assert len(split["vision"]) == 2 and len(split["audio"]) == 1
     assert len(split["llm"]) == 3
     assert all(isinstance(v, list) for v in split.values())
-    assert mp.schedule_from_plan(plan) == "zb-v"
-    assert mp.schedule_from_plan(None) == "1f1b"
-    assert mp.schedule_from_plan({"vision": 1}) == "1f1b"
-    assert mp.virtual_chunks_from_plan(plan) == 2
-    assert mp.virtual_chunks_from_plan(None) == 1
-    assert mp.virtual_chunks_from_plan({"vision": 1}) == 1
+    with pytest.warns(DeprecationWarning):
+        assert mp.schedule_from_plan(plan) == "zb-v"
+    with pytest.warns(DeprecationWarning):
+        assert mp.virtual_chunks_from_plan(plan) == 2
+
+
+def test_plan_shims_deprecate_and_reject_malformed():
+    """The legacy string-digging shims survive only as deprecated
+    adapters: every call warns, None still means "no plan" (classic
+    1F1B), and a dict that carries no recognizable schedule raises
+    instead of silently defaulting to 1f1b."""
+    from repro.core import modality_parallel as mp
+    with pytest.warns(DeprecationWarning):
+        assert mp.schedule_from_plan(None) == "1f1b"
+    with pytest.warns(DeprecationWarning):
+        assert mp.virtual_chunks_from_plan(None) == 1
+    # apply-flavor dicts resolve through schedule_name
+    with pytest.warns(DeprecationWarning):
+        assert mp.schedule_from_plan(
+            {"schedule": {"iteration_time": 1.0},
+             "schedule_name": "interleaved"}) == "interleaved"
+    # a recognized plan flavor without the chunk tag defaults to 1
+    with pytest.warns(DeprecationWarning):
+        assert mp.virtual_chunks_from_plan({"schedule": "1f1b"}) == 1
+    for bad in ({"vision": 1}, {"schedule": "gpipe"}, 17, "zb-v"):
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError):
+            mp.schedule_from_plan(bad)
+    for bad in ({"vision": 1}, {"virtual_chunks": 0}, 17):
+        with pytest.warns(DeprecationWarning), \
+                pytest.raises(ValueError):
+            mp.virtual_chunks_from_plan(bad)
