@@ -2,11 +2,19 @@
 
   * block-sparsity ratio: fraction of [128,128] tiles the kernel skips
     per mask type (the compute-term win vs a dense-mask kernel);
+  * grid compaction: dense vs compacted grid step counts (the
+    scalar-prefetch block map drops fully-masked tiles from the grid
+    itself — no grid step, no K/V DMA);
   * memory win: BAM bytes vs materialized-mask bytes at each seq len
     (the paper's C3 — O(T) vs O(T^2));
+  * backward pass: fused-kernel vs XLA-recompute wall time at reduced
+    scale (interpret mode — ordering check, not TPU perf) plus the
+    analytic residual-memory win (LSE row stats vs [T,T] logits);
+    rows are mirrored into ``BENCH_bam_bwd.json``;
   * interpret-mode wall time with/without block skipping at reduced
     scale (ordering check only — CPU interpret, not TPU perf).
 """
+import os
 import time
 
 import numpy as np
@@ -17,22 +25,18 @@ import jax.numpy as jnp
 from repro.core import bam
 from repro.data.synthetic import random_multimodal_bits
 from repro.kernels.bam_attention import bam_flash_attention
+from repro.kernels.ops import bam_attention
 
 from .common import emit, timeit
 
+BWD_JSON = os.environ.get("BENCH_BAM_BWD_JSON", "BENCH_bam_bwd.json")
+
 
 def tile_skip_fraction(bits, pos, bq=128, bk=128):
-    T = len(bits)
-    nq, nk = T // bq, T // bk
-    m = bam.allowed_mask(jnp.asarray(bits)[None], jnp.asarray(bits)[None],
-                         jnp.asarray(pos)[None], jnp.asarray(pos)[None])[0]
-    m = np.asarray(m)
-    skipped = 0
-    for i in range(nq):
-        for j in range(nk):
-            if not m[i * bq:(i + 1) * bq, j * bk:(j + 1) * bk].any():
-                skipped += 1
-    return skipped / (nq * nk)
+    """Fraction of [bq,bk] tiles with no allowed pair — the blockwise
+    ``any`` reduction shared with the kernel's grid compaction (strip
+    at a time; no O(T^2/bq/bk) python loop, no dense [T,T] mask)."""
+    return bam.build_block_map(bits, bits, pos, pos, bq, bk).skip_fraction
 
 
 def run(smoke: bool = False):
@@ -42,18 +46,53 @@ def run(smoke: bool = False):
         for T in seq_lens:
             t0 = time.perf_counter()
             bits, pos = random_multimodal_bits(T, mode, seed=0)
-            frac = tile_skip_fraction(bits, pos)
+            # one block-level reduction yields both the skip fraction
+            # and the compacted grid (dense vs remaining steps)
+            bm = bam.build_block_map(bits, bits, pos, pos, 128, 128)
+            frac = bm.skip_fraction
             us = (time.perf_counter() - t0) * 1e6
             bam_bytes = T * 4
             mask_bytes = T * T
             emit(f"kernel/skip-{mode}-T{T}", us,
                  f"tiles_skipped={frac:.3f};"
+                 f"grid_steps={bm.n_steps}/{bm.n_dense_steps};"
                  f"mask_mem_ratio={mask_bytes / bam_bytes:.0f}x")
+
+    # backward: fused kernel vs XLA-recompute (reduced scale, interpret)
+    T = 64 if smoke else 128
+    B, H, hd = 1, 2, 32
+    bits_np, pos_np = random_multimodal_bits(T, "mp", seed=0)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, T, H, hd), jnp.float32)
+    bits = jnp.asarray(bits_np)[None]
+    pos = jnp.asarray(pos_np)[None]
+
+    def grad_fn(impl):
+        def loss(q):
+            return jnp.sum(bam_attention(q, q, q, bits, bits, pos, pos,
+                                         impl=impl, block_q=32,
+                                         block_k=32) ** 2)
+        return jax.jit(jax.grad(loss))
+
+    iters = 1 if smoke else 2
+    us_fused = timeit(grad_fn("bam_interpret"), q, iters=iters, warmup=1)
+    us_xla = timeit(grad_fn("xla"), q, iters=iters, warmup=1)
+    # analytic backward-memory term: XLA-recompute re-materializes the
+    # [B,H,T,T] f32 logits; the fused path saves only (out, lse) rows.
+    mem_xla = B * H * T * T * 4
+    mem_fused = B * H * T * 4 + B * T * H * hd * 4
+    if os.path.exists(BWD_JSON):
+        os.remove(BWD_JSON)
+    emit(f"kernel/bwd-fused-T{T}-mp", us_fused,
+         f"resid_bytes={mem_fused}", json_path=BWD_JSON,
+         impl="bam_interpret", seq_len=T, bwd_bytes=mem_fused)
+    emit(f"kernel/bwd-xla-T{T}-mp", us_xla,
+         f"logits_bytes={mem_xla};mem_ratio={mem_xla / mem_fused:.1f}x",
+         json_path=BWD_JSON, impl="xla", seq_len=T, bwd_bytes=mem_xla)
 
     # interpret-mode ordering check (reduced scale)
     T = 128 if smoke else 256
     bits_np, pos_np = random_multimodal_bits(T, "mp", seed=0)
-    key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (1, T, 2, 32), jnp.float32)
     bits = jnp.asarray(bits_np)[None]
     pos = jnp.asarray(pos_np)[None]
@@ -67,6 +106,19 @@ def run(smoke: bool = False):
     us_dense = timeit(f, False, iters=iters, warmup=1)
     emit(f"kernel/interpret-T{T}-mp", us_skip,
          f"skip_vs_dense={us_dense / us_skip:.2f}x")
+
+    # compacted grid vs dense grid (same kernel math, fewer steps)
+    bm = bam.build_block_map(bits_np, bits_np, pos_np, pos_np, 32, 32)
+
+    def g(block_map):
+        return bam_flash_attention(q, q, q, bits, bits, pos, pos,
+                                   block_q=32, block_k=32,
+                                   block_map=block_map, interpret=True)
+    us_compact = timeit(g, bm, iters=iters, warmup=1)
+    us_dense_grid = timeit(g, None, iters=iters, warmup=1)
+    emit(f"kernel/compact-T{T}-mp", us_compact,
+         f"grid_steps={bm.n_steps}/{bm.n_dense_steps};"
+         f"compact_vs_dense={us_dense_grid / us_compact:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
 """Shared benchmark utilities: wall-clock timing + CSV emission.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived =
-table-specific figure of merit, e.g. speedup or imbalance)."""
+table-specific figure of merit, e.g. speedup or imbalance). ``emit``
+optionally mirrors a row into a ``BENCH_<x>.json``-style record file
+(one JSON object per row, accumulated into a list) for machine
+consumers — pass ``json_path`` plus any extra keyword fields."""
+import json
+import os
 import time
 
 import jax
@@ -22,5 +27,17 @@ def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived) -> None:
+def emit(name: str, us: float, derived, json_path: str = None,
+         **fields) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    if json_path is None:
+        return
+    records = []
+    if os.path.exists(json_path):
+        with open(json_path, encoding="utf-8") as f:
+            records = json.load(f)
+    records.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": str(derived), **fields})
+    with open(json_path, "w", encoding="utf-8") as f:
+        json.dump(records, f, indent=1)
+        f.write("\n")

@@ -30,6 +30,7 @@ Sliding-window (gemma2 local layers) further requires
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -147,25 +148,29 @@ def token_workload(bits: np.ndarray, pos: np.ndarray,
         idx = idx[np.argsort(pos[idx], kind="stable")]
         m = mod[idx]
         a = att[idx]
+        p = pos[idx]
         n = idx.shape[0]
-        # cumulative count of keys of each modality up to (and incl) position
         mods_here = np.unique(m)
-        cum = {mm: np.cumsum(m == mm) for mm in mods_here}
         total = {mm: int((m == mm).sum()) for mm in mods_here}
         w = np.zeros(n, np.float64)
         text_rows = m == TEXT
         for mm in mods_here:
             bit_ok = ((a >> int(mm)) & 1) != 0
-            # text queries: causal count of modality-mm keys <= my position
-            w += np.where(text_rows & bit_ok, cum[mm], 0.0)
+            # text queries: count of modality-mm keys with
+            # pos_i - window < pos_j <= pos_i (exact per modality — a
+            # single min(total, window) clamp would over-subtract for
+            # text rows that also attend modality keys)
+            pos_mm = p[m == mm]          # ascending (p is sorted)
+            hi = np.searchsorted(pos_mm, p, side="right")
+            if window:
+                lo = np.searchsorted(pos_mm, p - window, side="right")
+            else:
+                lo = 0
+            w += np.where(text_rows & bit_ok, hi - lo, 0.0)
             # modality queries: bidirectional within own stream only
+            # (window constrains text queries only, matching allowed_mask)
             if mm != TEXT:
                 w += np.where((m == mm) & bit_ok, float(total[mm]), 0.0)
-        if window:
-            # subtract out-of-window causal keys for text rows (approx:
-            # window only used with pure-text local layers)
-            w_uncapped = w
-            w = np.where(text_rows, np.minimum(w_uncapped, window), w)
         W[idx] = w
     return W
 
@@ -181,6 +186,115 @@ def block_workload(bits: np.ndarray, pos: np.ndarray, block: int,
     padded = np.zeros(nb * block, np.float64)
     padded[:T] = W
     return padded.reshape(nb, block).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side kernel grid compaction: from the block-level reduction of the
+# bitfield mask, a flattened list of active (q-block, k-block) tiles that
+# drives the Pallas kernel through a scalar-prefetch index map. Fully
+# masked tiles are dropped from the grid itself — they cost neither a
+# grid step nor a K/V DMA (the in-kernel `pl.when` skip only saves the
+# MXU work, not the copies).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockMask:
+    """Compacted kernel grid for one (bits, pos) mask instance.
+
+    Two flattened orderings of the active tiles, both as tuples of
+    python ints so the object is hashable (it rides through
+    ``jax.custom_vjp`` as a static argument):
+
+    * q-major (forward + dQ backward): tiles sorted by q-block, each
+      q-block's active k-blocks consecutive. ``first``/``last`` flag the
+      accumulator init/flush steps; a q-block with NO active tile still
+      gets one step with ``active == 0`` so its output rows are written
+      (as zeros) exactly once.
+    * k-major (dK/dV backward): same construction transposed.
+    """
+    block_q: int
+    block_k: int
+    nq: int
+    nk: int
+    window: int
+    q_steps: Tuple[Tuple[int, int, int, int, int], ...]  # (iq, ik, first, last, active)
+    k_steps: Tuple[Tuple[int, int, int, int, int], ...]
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.q_steps)
+
+    @property
+    def n_dense_steps(self) -> int:
+        return self.nq * self.nk
+
+    @property
+    def skip_fraction(self) -> float:
+        active = sum(s[4] for s in self.q_steps)
+        return 1.0 - active / max(self.n_dense_steps, 1)
+
+    def arrays(self, major: str = "q"):
+        """(q_block, k_block, first, last, active) int32 arrays for the
+        scalar-prefetch operands."""
+        steps = self.q_steps if major == "q" else self.k_steps
+        cols = np.asarray(steps, np.int32).reshape(len(steps), 5)
+        return tuple(np.ascontiguousarray(cols[:, j]) for j in range(5))
+
+
+def _flatten_active(active: np.ndarray) -> Tuple[Tuple[int, ...], ...]:
+    """active: [n_major, n_minor] bool -> q-major flattened step tuples."""
+    steps = []
+    for i in range(active.shape[0]):
+        js = np.flatnonzero(active[i])
+        if js.size == 0:
+            steps.append((i, 0, 1, 1, 0))
+            continue
+        for t, j in enumerate(js):
+            steps.append((i, int(j), int(t == 0), int(t == js.size - 1), 1))
+    return tuple(steps)
+
+
+def build_block_map(q_bits, kv_bits, q_pos, kv_pos, block_q: int,
+                    block_k: int, window: int = 0) -> BlockMask:
+    """Block-level reduction of the bitfield mask (host side, numpy).
+
+    Accepts [T] or [B, T] arrays; a tile is active if ANY batch row has
+    any allowed (q, k) pair inside it, so one map is valid for the whole
+    batch. Sequences are padded to block multiples with bits=0 (never
+    attends — identical to the kernel wrapper's padding)."""
+    q_bits = np.atleast_2d(np.asarray(q_bits, np.uint32))
+    kv_bits = np.atleast_2d(np.asarray(kv_bits, np.uint32))
+    q_pos = np.atleast_2d(np.asarray(q_pos, np.int64))
+    kv_pos = np.atleast_2d(np.asarray(kv_pos, np.int64))
+    Tq, Tk = q_bits.shape[1], kv_bits.shape[1]
+    nq = -(-Tq // block_q)
+    nk = -(-Tk // block_k)
+
+    def _pad(x, to, value=0):
+        pad = to - x.shape[1]
+        if pad:
+            x = np.pad(x, ((0, 0), (0, pad)), constant_values=value)
+        return x
+
+    qb = _pad(q_bits, nq * block_q)
+    kb = _pad(kv_bits, nk * block_k)
+    qp = _pad(q_pos, nq * block_q, -1)
+    kp = _pad(kv_pos, nk * block_k, -1)
+    # reduce strip-by-strip: peak host memory O(B·block_q·Tk), never the
+    # full O(Tq·Tk) mask — at the long-context scale this feature
+    # targets, materializing the dense mask would be the very blow-up
+    # the compacted grid exists to avoid
+    active = np.zeros((nq, nk), bool)
+    for iq in range(nq):
+        s = slice(iq * block_q, (iq + 1) * block_q)
+        strip = np.asarray(allowed_mask(qb[:, s], kb, qp[:, s], kp, window))
+        active[iq] = strip.reshape(-1, block_q, nk, block_k).any(
+            axis=(0, 1, 3))
+    return BlockMask(block_q=block_q, block_k=block_k, nq=nq, nk=nk,
+                     window=window,
+                     q_steps=_flatten_active(active),
+                     k_steps=tuple((i, j, f, l, a) for (j, i, f, l, a)
+                                   in _flatten_active(active.T)))
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,14 @@ Both run under ``shard_map`` over a named mesh axis. A collective-free
 reference (``cp_reference``) computes identical math for single-device
 tests; multi-device equivalence is tested in a subprocess with
 ``--xla_force_host_platform_device_count``.
+
+Per-step attention math (``impl=``): the default ``"xla"`` body
+materializes the [B,H,Tq,Tk] logits in HBM per step; ``"bam_kernel"`` /
+``"bam_interpret"`` route through the Pallas stats kernel
+(``repro.kernels.ops.bam_attention_stats``) which returns the same
+unnormalized (acc, m, l) partials with the bitfield mask evaluated
+in-registers — the per-step logits never leave VMEM. The XLA body is
+kept as the CPU fallback and ``cp_reference`` stays the oracle.
 """
 from __future__ import annotations
 
@@ -83,7 +91,9 @@ def invert_perm(perm: np.ndarray) -> np.ndarray:
 
 def _masked_attn_stats(q, k, v, mask, scale, softcap: float = 0.0):
     """Returns (acc [B,H,Tq,hd] = sum exp(l-m)·V, m [B,H,Tq], l [B,H,Tq])
-    — unnormalized flash-attention partials for cross-chunk combine."""
+    — unnormalized flash-attention partials for cross-chunk combine.
+    Dense XLA body: materializes [B,H,Tq,Tk] logits (CPU fallback; the
+    kernel path in ``_attn_stats`` avoids exactly this)."""
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
     if softcap:
@@ -96,6 +106,25 @@ def _masked_attn_stats(q, k, v, mask, scale, softcap: float = 0.0):
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v.dtype), v)
     return acc.astype(jnp.float32), m, l
+
+
+def _attn_stats(q, k, v, q_bits, kv_bits, q_pos, kv_pos,
+                softcap: float, window: int, impl: str):
+    """Stats-path dispatch: ``impl="xla"`` builds the dense mask and
+    logits; kernel impls evaluate the bitfield in-registers and never
+    materialize an O(Tq·Tk) intermediate. Both derive the hd**-0.5
+    scale themselves (the kernel hardcodes it) so the paths can't
+    silently diverge."""
+    if impl == "xla":
+        mask = bam.allowed_mask(q_bits, kv_bits, q_pos, kv_pos,
+                                window)[:, None]
+        return _masked_attn_stats(q, k, v, mask, q.shape[-1] ** -0.5,
+                                  softcap)
+    from repro.kernels.ops import auto_block, bam_attention_stats
+    return bam_attention_stats(
+        q, k, v, q_bits, kv_bits, q_pos, kv_pos, softcap=softcap,
+        window=window, impl=impl, block_q=auto_block(q.shape[1]),
+        block_k=auto_block(k.shape[1]))
 
 
 def _combine_stats(acc1, m1, l1, acc2, m2, l2):
@@ -116,29 +145,29 @@ def _finish(acc, m, l, dtype):
 # ---------------------------------------------------------------------------
 
 def _allgather_body(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
-                    axis_name: str, softcap: float, window: int):
+                    axis_name: str, softcap: float, window: int,
+                    impl: str = "xla"):
     """Per-rank: local queries [B,Tq/G]; gather all K/V."""
     k_all = lax.all_gather(k, axis_name, axis=1, tiled=True)
     v_all = lax.all_gather(v, axis_name, axis=1, tiled=True)
     kb_all = lax.all_gather(kv_bits, axis_name, axis=1, tiled=True)
     kp_all = lax.all_gather(kv_pos, axis_name, axis=1, tiled=True)
-    mask = bam.allowed_mask(q_bits, kb_all, q_pos, kp_all, window)[:, None]
-    scale = q.shape[-1] ** -0.5
-    acc, m, l = _masked_attn_stats(q, k_all, v_all, mask, scale, softcap)
+    acc, m, l = _attn_stats(q, k_all, v_all, q_bits, kb_all, q_pos, kp_all,
+                            softcap, window, impl)
     return _finish(acc, m, l, q.dtype)
 
 
 def _ring_body(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
-               axis_name: str, softcap: float, window: int):
+               axis_name: str, softcap: float, window: int,
+               impl: str = "xla"):
     """P2P ring: pass K/V chunks around, combine online-softmax stats."""
     G = lax.psum(1, axis_name)
-    scale = q.shape[-1] ** -0.5
     B, Tq, H, hd = q.shape
 
     def step(i, carry):
         acc, m, l, kc, vc, kb, kp = carry
-        mask = bam.allowed_mask(q_bits, kb, q_pos, kp, window)[:, None]
-        a2, m2, l2 = _masked_attn_stats(q, kc, vc, mask, scale, softcap)
+        a2, m2, l2 = _attn_stats(q, kc, vc, q_bits, kb, q_pos, kp,
+                                 softcap, window, impl)
         acc, m, l = _combine_stats(acc, m, l, a2, m2, l2)
         perm = [(j, (j + 1) % G) for j in range(G)]
         kc = lax.ppermute(kc, axis_name, perm)
@@ -161,13 +190,20 @@ def _ring_body(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
 
 def cp_attention(mesh, axis_name: str, q, k, v, q_bits, kv_bits, q_pos,
                  kv_pos, *, method: str = "allgather", softcap: float = 0.0,
-                 window: int = 0):
+                 window: int = 0, impl: str = "xla"):
     """Inputs are GLOBAL arrays already permuted to plan layout
     ([B, T, H, hd] etc.); shard_map splits the token axis over
-    ``axis_name``. Output is the global [B, T, H, hd] in plan layout."""
+    ``axis_name``. Output is the global [B, T, H, hd] in plan layout.
+
+    impl: per-step attention math — "xla" (dense logits, CPU fallback)
+    or "bam_kernel" / "bam_interpret" (Pallas stats kernel, no
+    O(Tq·Tk) intermediate per rank). The kernel impls are FORWARD-ONLY
+    (benchmarks/serving): the stats kernel has no VJP, so jax.grad
+    through them fails at trace time — train through the "xla" body or
+    through ops.bam_attention's fused backward instead."""
     body = {"allgather": _allgather_body, "ring": _ring_body}[method]
     fn = functools.partial(body, axis_name=axis_name, softcap=softcap,
-                           window=window)
+                           window=window, impl=impl)
     tok = P(None, axis_name)
     tok3 = P(None, axis_name, None, None)
     return shard_map(

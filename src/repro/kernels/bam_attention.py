@@ -1,4 +1,4 @@
-"""BAM flash attention — Pallas TPU kernel (Cornstarch C3, TPU-native).
+"""BAM flash attention — Pallas TPU kernels (Cornstarch C3, TPU-native).
 
 The paper represents multimodal attention masks as 1-D per-token integer
 bitfields (BAM) and materializes [T,T] masks only transiently inside the
@@ -7,25 +7,45 @@ here goes further: the mask is evaluated **in-registers inside the
 kernel** from the two bitfield vectors — the [T,T] mask never exists in
 HBM *or* VMEM, only a [bq,bk] tile of it lives in VREGs per grid step.
 
-Layout / tiling:
+Layout / tiling (dense grid):
   grid = (B, H, Tq/bq, Tk/bk), dimension_semantics = (parallel, parallel,
   parallel, arbitrary). Online-softmax running stats (m, l) and the
   output accumulator live in VMEM scratch and persist across the
   arbitrary (k-block) grid dimension; the output tile is written at the
   last k step. bq = bk = 128 matches the MXU systolic tile.
 
-Block sparsity (beyond-paper): before touching the MXU, the kernel
-reduces the [bq,bk] bitfield intersection; a fully-masked tile skips the
-QK^T matmul entirely (`pl.when`). With BAM masks this prunes ~half the
-tiles for causal text and all cross-modality tiles — see EXPERIMENTS.md
-§Perf.
+Block sparsity, two levels (beyond-paper):
+  * in-kernel skip (``block_skip``): the kernel reduces the [bq,bk]
+    bitfield intersection before touching the MXU; a fully-masked tile
+    skips the QK^T matmul via ``pl.when`` — but still pays its grid step
+    and K/V copies.
+  * grid compaction (``block_map``): a host-side
+    ``repro.core.bam.build_block_map`` precomputes the active
+    (q-block, k-block) tile list from the block-level bitfield
+    reduction; the kernel then runs a flattened grid (B, H, n_steps)
+    driven by scalar-prefetch index maps
+    (``pltpu.PrefetchScalarGridSpec``), so fully-masked tiles cost
+    neither a grid step nor a K/V DMA.
 
 GQA: the K/V BlockSpec index_map folds the q-head -> kv-head mapping
 (h // n_rep), so no jnp.repeat of K/V ever materializes.
 
-Backward: custom_vjp recomputes through the XLA reference path (the
-paper's contribution is the mask representation, not attention math;
-a fused backward kernel is a further optimization, not correctness).
+Forward modes (``return_mode``):
+  * ``"out"``       — normalized attention output only;
+  * ``"residual"``  — (out, lse[B,H,Tq]); the per-row log-sum-exp is the
+    flash-attention residual the fused backward consumes, so backward
+    never re-materializes the O(Tq*Tk) logits;
+  * ``"stats"``     — unnormalized partials (acc[B,Tq,H,hd] f32,
+    m[B,H,Tq], l[B,H,Tq]) for cross-chunk online-softmax combination —
+    what the context-parallel ring/allgather bodies consume.
+
+Backward: ``bam_flash_attention_bwd`` is a pair of fused kernels — dQ
+over a (B, H, nq, nk) grid and dK/dV over the transposed (B, H, nk, nq)
+grid — that recompute the logits tile-by-tile from (q, k, lse), apply
+the bitfield mask in-registers, and accumulate gradients in VMEM
+scratch. Both honor ``block_skip`` and ``block_map`` exactly like the
+forward. The old recompute-through-XLA path survives only as the
+``impl="xla"`` fallback in ops.py.
 """
 from __future__ import annotations
 
@@ -75,46 +95,73 @@ def _mask_tile(qb, kb, qp, kp, window: int):
     return nonpad & same_doc & bit_ok & rule
 
 
-def _bam_fwd_kernel(qb_ref, kb_ref, qp_ref, kp_ref,     # prefetch-ish meta
+# ---------------------------------------------------------------------------
+# Forward kernel bodies (shared by the dense and compacted grids)
+# ---------------------------------------------------------------------------
+
+def _fwd_accumulate(allowed, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                    softcap: float, scale: float):
+    q = q_ref[0, :, 0, :].astype(jnp.float32)           # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(allowed, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(allowed, p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _fwd_init(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _fwd_finish(mode, out_refs, m_scr, l_scr, acc_scr):
+    m = m_scr[...]
+    l = l_scr[...]
+    if mode == "stats":
+        acc_ref, m_ref, l_ref = out_refs
+        acc_ref[0, :, 0, :] = acc_scr[...].astype(acc_ref.dtype)
+        m_ref[0, 0] = m
+        l_ref[0, 0] = l
+        return
+    out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+    out = jnp.where((l > 0)[:, None], out, 0.0)
+    if mode == "residual":
+        o_ref, lse_ref = out_refs
+        lse_ref[0, 0] = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)),
+                                  NEG_INF)
+    else:
+        (o_ref,) = out_refs
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def _bam_fwd_kernel(qb_ref, kb_ref, qp_ref, kp_ref,     # bitfield meta
                     q_ref, k_ref, v_ref,                # tensors
-                    o_ref,                              # output
-                    m_scr, l_scr, acc_scr,              # VMEM scratch
-                    *, softcap: float, window: int, nk: int, scale: float,
-                    block_skip: bool):
+                    *refs,                              # outputs + scratch
+                    softcap: float, window: int, nk: int, scale: float,
+                    block_skip: bool, mode: str):
+    out_refs, (m_scr, l_scr, acc_scr) = refs[:-3], refs[-3:]
     ki = pl.program_id(3)
 
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    qb = qb_ref[0]
-    kb = kb_ref[0]
-    qp = qp_ref[0]
-    kp = kp_ref[0]
-    allowed = _mask_tile(qb, kb, qp, kp, window)        # [bq, bk]
+    pl.when(ki == 0)(lambda: _fwd_init(m_scr, l_scr, acc_scr))
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
 
     def compute():
-        q = q_ref[0, :, 0, :].astype(jnp.float32)       # [bq, hd]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)       # [bk, hd]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        s = s * scale
-        if softcap:
-            s = jnp.tanh(s / softcap) * softcap
-        s = jnp.where(allowed, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])
-        p = jnp.where(allowed, p, 0.0)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-        acc_scr[...] = acc_scr[...] * alpha[:, None] + \
-            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        _fwd_accumulate(allowed, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                        softcap, scale)
 
     if block_skip:
         # block sparsity: a fully-masked tile never touches the MXU
@@ -122,60 +169,521 @@ def _bam_fwd_kernel(qb_ref, kb_ref, qp_ref, kp_ref,     # prefetch-ish meta
     else:
         compute()
 
+    pl.when(ki == nk - 1)(
+        lambda: _fwd_finish(mode, out_refs, m_scr, l_scr, acc_scr))
+
+
+def _bam_fwd_kernel_sparse(qblk_ref, kblk_ref, first_ref, last_ref,
+                           active_ref,                  # scalar prefetch
+                           qb_ref, kb_ref, qp_ref, kp_ref,
+                           q_ref, k_ref, v_ref,
+                           *refs,
+                           softcap: float, window: int, scale: float,
+                           block_skip: bool, mode: str):
+    """Grid-compacted forward: grid (B, H, n_steps); the active-tile list
+    (host-precomputed) drives the index maps, init and flush."""
+    out_refs, (m_scr, l_scr, acc_scr) = refs[:-3], refs[-3:]
+    t = pl.program_id(2)
+
+    pl.when(first_ref[t] == 1)(lambda: _fwd_init(m_scr, l_scr, acc_scr))
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
+    is_active = active_ref[t] == 1
+
+    def compute():
+        _fwd_accumulate(allowed, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                        softcap, scale)
+
+    if block_skip:
+        pl.when(is_active & jnp.any(allowed))(compute)
+    else:
+        pl.when(is_active)(compute)
+
+    pl.when(last_ref[t] == 1)(
+        lambda: _fwd_finish(mode, out_refs, m_scr, l_scr, acc_scr))
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel bodies
+# ---------------------------------------------------------------------------
+
+def _recompute_p_ds(allowed, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    softcap: float, scale: float):
+    """Recompute the probability tile from (q, k, lse) and form
+    dS = P * (dP - delta), with the softcap chain rule folded in.
+    Returns (p [bq,bk], ds [bq,bk], q, k, do) all f32."""
+    q = q_ref[0, :, 0, :].astype(jnp.float32)           # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, 0]                                 # [bq]
+    delta = delta_ref[0, 0]                             # [bq]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    p = jnp.where(allowed, jnp.exp(s - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    if softcap:
+        ds = ds * (1.0 - (s / softcap) ** 2)
+    return p, ds, q, k, do
+
+
+def _bam_bwd_dq_kernel(qb_ref, kb_ref, qp_ref, kp_ref,
+                       q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                       dq_ref, dq_scr, *, softcap: float, window: int,
+                       nk: int, scale: float, block_skip: bool):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
+
+    def compute():
+        _, ds, _, k, _ = _recompute_p_ds(
+            allowed, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            softcap, scale)
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    if block_skip:
+        pl.when(jnp.any(allowed))(compute)
+    else:
+        compute()
+
     @pl.when(ki == nk - 1)
     def _finish():
-        l = l_scr[...]
-        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
-        out = jnp.where((l > 0)[:, None], out, 0.0)
-        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bam_bwd_dq_kernel_sparse(qblk_ref, kblk_ref, first_ref, last_ref,
+                              active_ref,
+                              qb_ref, kb_ref, qp_ref, kp_ref,
+                              q_ref, k_ref, v_ref, do_ref, lse_ref,
+                              delta_ref, dq_ref, dq_scr, *,
+                              softcap: float, window: int, scale: float,
+                              block_skip: bool):
+    t = pl.program_id(2)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
+    is_active = active_ref[t] == 1
+
+    def compute():
+        _, ds, _, k, _ = _recompute_p_ds(
+            allowed, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+            softcap, scale)
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    if block_skip:
+        pl.when(is_active & jnp.any(allowed))(compute)
+    else:
+        pl.when(is_active)(compute)
+
+    @pl.when(last_ref[t] == 1)
+    def _finish():
+        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_accumulate(allowed, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_scr, dv_scr, softcap: float, scale: float):
+    p, ds, q, _, do = _recompute_p_ds(
+        allowed, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+        softcap, scale)
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+
+def _bam_bwd_dkv_kernel(qb_ref, kb_ref, qp_ref, kp_ref,
+                        q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                        dk_ref, dv_ref, dk_scr, dv_scr, *,
+                        softcap: float, window: int, nq: int, scale: float,
+                        block_skip: bool):
+    """Transposed grid (B, H, nk, nq): the arbitrary dimension iterates
+    q blocks; dK/dV accumulate per k block."""
+    qi = pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
+
+    def compute():
+        _dkv_accumulate(allowed, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                        delta_ref, dk_scr, dv_scr, softcap, scale)
+
+    if block_skip:
+        pl.when(jnp.any(allowed))(compute)
+    else:
+        compute()
+
+    @pl.when(qi == nq - 1)
+    def _finish():
+        dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bam_bwd_dkv_kernel_sparse(qblk_ref, kblk_ref, first_ref, last_ref,
+                               active_ref,
+                               qb_ref, kb_ref, qp_ref, kp_ref,
+                               q_ref, k_ref, v_ref, do_ref, lse_ref,
+                               delta_ref, dk_ref, dv_ref, dk_scr, dv_scr, *,
+                               softcap: float, window: int, scale: float,
+                               block_skip: bool):
+    t = pl.program_id(2)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0], window)
+    is_active = active_ref[t] == 1
+
+    def compute():
+        _dkv_accumulate(allowed, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                        delta_ref, dk_scr, dv_scr, softcap, scale)
+
+    if block_skip:
+        pl.when(is_active & jnp.any(allowed))(compute)
+    else:
+        pl.when(is_active)(compute)
+
+    @pl.when(last_ref[t] == 1)
+    def _finish():
+        dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _check_block_map(block_map, block_q, block_k, nq, nk, window):
+    assert block_map.block_q == block_q and block_map.block_k == block_k, \
+        ("block_map was built for different tile sizes",
+         (block_map.block_q, block_map.block_k), (block_q, block_k))
+    assert block_map.nq == nq and block_map.nk == nk, \
+        ("block_map grid does not match the padded sequence",
+         (block_map.nq, block_map.nk), (nq, nk))
+    assert block_map.window == window, \
+        ("block_map was built for a different sliding window — tiles "
+         "valid under this window may have been pruned",
+         block_map.window, window)
+
+
+def _prefetch_arrays(block_map, major):
+    return tuple(jnp.asarray(a) for a in block_map.arrays(major))
+
+
+def _sparse_index_maps(n_rep: int):
+    """Index maps for the compacted (B, H, n_steps) grids. All receive
+    (b, h, t, *scalar_prefetch_refs); the step arrays address the
+    blocks. Shared by forward and backward so the prefetch layout can
+    only change in one place."""
+
+    def qm(b, h, t, qblk, kblk, first, last, active):
+        return (b, qblk[t])
+
+    def km(b, h, t, qblk, kblk, first, last, active):
+        return (b, kblk[t])
+
+    def qtile(b, h, t, qblk, kblk, first, last, active):
+        return (b, qblk[t], h, 0)
+
+    def ktile(b, h, t, qblk, kblk, first, last, active):
+        return (b, kblk[t], h // n_rep, 0)
+
+    def ktile_full(b, h, t, qblk, kblk, first, last, active):
+        return (b, kblk[t], h, 0)
+
+    def qrow(b, h, t, qblk, kblk, first, last, active):
+        return (b, h, qblk[t])
+
+    return qm, km, qtile, ktile, ktile_full, qrow
 
 
 def bam_flash_attention(q, k, v, q_bits, kv_bits, q_pos, kv_pos, *,
                         softcap: float = 0.0, window: int = 0,
                         block_q: int = 128, block_k: int = 128,
                         block_skip: bool = True,
-                        interpret: bool = False):
+                        interpret: bool = False,
+                        return_mode: str = "out",
+                        block_map=None):
     """Pallas BAM attention forward. Shapes as in ref.py; Tq % block_q
-    == 0 and Tk % block_k == 0 (ops.py pads with bits=0)."""
+    == 0 and Tk % block_k == 0 (ops.py pads with bits=0, pos=-1).
+
+    return_mode: "out" | "residual" (out, lse) | "stats" (acc, m, l).
+    block_map: optional ``repro.core.bam.BlockMask`` — compacted grid.
+    """
+    assert return_mode in ("out", "residual", "stats"), return_mode
     B, Tq, H, hd = q.shape
     _, Tk, Hkv, _ = k.shape
     assert H % Hkv == 0
     n_rep = H // Hkv
     assert Tq % block_q == 0 and Tk % block_k == 0, (Tq, Tk)
     nq, nk = Tq // block_q, Tk // block_k
-    grid = (B, H, nq, nk)
 
-    kernel = functools.partial(
-        _bam_fwd_kernel, softcap=softcap, window=window, nk=nk,
-        scale=hd ** -0.5, block_skip=block_skip)
+    out_shapes = {
+        "out": (jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),),
+        "residual": (jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+                     jax.ShapeDtypeStruct((B, H, Tq), jnp.float32)),
+        "stats": (jax.ShapeDtypeStruct((B, Tq, H, hd), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H, Tq), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H, Tq), jnp.float32)),
+    }[return_mode]
+    scratch = [
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]
+    common = dict(softcap=softcap, window=window, scale=hd ** -0.5,
+                  block_skip=block_skip, mode=return_mode)
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
-            pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
-            pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
-            pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
-            pl.BlockSpec((1, block_q, 1, hd),
-                         lambda b, h, iq, ik: (b, iq, h, 0)),
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, h, iq, ik, n_rep=n_rep:
-                         (b, ik, h // n_rep, 0)),
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, h, iq, ik, n_rep=n_rep:
-                         (b, ik, h // n_rep, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, 1, hd),
-                               lambda b, h, iq, ik: (b, iq, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, hd), jnp.float32),
-        ],
-        compiler_params=_compiler_params_cls()(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(q_bits, kv_bits, q_pos, kv_pos, q, k, v)
+    if block_map is None:
+        kernel = functools.partial(_bam_fwd_kernel, nk=nk, **common)
+        tile_specs = {
+            "out": [pl.BlockSpec((1, block_q, 1, hd),
+                                 lambda b, h, iq, ik: (b, iq, h, 0))],
+            "residual": [pl.BlockSpec((1, block_q, 1, hd),
+                                      lambda b, h, iq, ik: (b, iq, h, 0)),
+                         pl.BlockSpec((1, 1, block_q),
+                                      lambda b, h, iq, ik: (b, h, iq))],
+            "stats": [pl.BlockSpec((1, block_q, 1, hd),
+                                   lambda b, h, iq, ik: (b, iq, h, 0)),
+                      pl.BlockSpec((1, 1, block_q),
+                                   lambda b, h, iq, ik: (b, h, iq)),
+                      pl.BlockSpec((1, 1, block_q),
+                                   lambda b, h, iq, ik: (b, h, iq))],
+        }[return_mode]
+        outs = pl.pallas_call(
+            kernel,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+                pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, iq, ik: (b, iq, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, iq, ik, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, iq, ik, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+            ],
+            out_specs=list(tile_specs),
+            out_shape=list(out_shapes),
+            scratch_shapes=scratch,
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(q_bits, kv_bits, q_pos, kv_pos, q, k, v)
+    else:
+        _check_block_map(block_map, block_q, block_k, nq, nk, window)
+        kernel = functools.partial(_bam_fwd_kernel_sparse, **common)
+        qm, km, qtile, ktile, _, qrow = _sparse_index_maps(n_rep)
+        tile_specs = {
+            "out": [pl.BlockSpec((1, block_q, 1, hd), qtile)],
+            "residual": [pl.BlockSpec((1, block_q, 1, hd), qtile),
+                         pl.BlockSpec((1, 1, block_q), qrow)],
+            "stats": [pl.BlockSpec((1, block_q, 1, hd), qtile),
+                      pl.BlockSpec((1, 1, block_q), qrow),
+                      pl.BlockSpec((1, 1, block_q), qrow)],
+        }[return_mode]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(B, H, block_map.n_steps),
+            in_specs=[
+                pl.BlockSpec((1, block_q), qm),
+                pl.BlockSpec((1, block_k), km),
+                pl.BlockSpec((1, block_q), qm),
+                pl.BlockSpec((1, block_k), km),
+                pl.BlockSpec((1, block_q, 1, hd), qtile),
+                pl.BlockSpec((1, block_k, 1, hd), ktile),
+                pl.BlockSpec((1, block_k, 1, hd), ktile),
+            ],
+            out_specs=list(tile_specs),
+            scratch_shapes=scratch,
+        )
+        outs = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=list(out_shapes),
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(*_prefetch_arrays(block_map, "q"),
+          q_bits, kv_bits, q_pos, kv_pos, q, k, v)
+
+    outs = tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
+    return outs[0] if return_mode == "out" else outs
+
+
+def bam_flash_attention_bwd(q, k, v, out, do, lse, q_bits, kv_bits, q_pos,
+                            kv_pos, *, softcap: float = 0.0, window: int = 0,
+                            block_q: int = 128, block_k: int = 128,
+                            block_skip: bool = True,
+                            interpret: bool = False,
+                            block_map=None):
+    """Fused BAM flash-attention backward: dQ, dK, dV from the saved
+    (out, lse) residuals — the O(Tq*Tk) logits are recomputed tile by
+    tile in VMEM, never materialized. dK/dV are returned GQA-reduced to
+    [B, Tk, Hkv, hd]."""
+    B, Tq, H, hd = q.shape
+    _, Tk, Hkv, _ = k.shape
+    n_rep = H // Hkv
+    assert Tq % block_q == 0 and Tk % block_k == 0, (Tq, Tk)
+    nq, nk = Tq // block_q, Tk // block_k
+    scale = hd ** -0.5
+
+    # delta_i = sum_d dO_i·O_i — the rowwise correction term (O(T·hd))
+    delta = jnp.einsum("bqhd,bqhd->bhq", out.astype(jnp.float32),
+                       do.astype(jnp.float32))
+
+    common = dict(softcap=softcap, window=window, scale=scale,
+                  block_skip=block_skip)
+    operands = (q_bits, kv_bits, q_pos, kv_pos, q, k, v, do, lse, delta)
+
+    if block_map is None:
+        dq = pl.pallas_call(
+            functools.partial(_bam_bwd_dq_kernel, nk=nk, **common),
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+                pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, iq, ik: (b, iq, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, iq, ik, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, iq, ik, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, iq, ik: (b, iq, h, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, iq, ik: (b, h, iq)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, iq, ik: (b, h, iq)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                                   lambda b, h, iq, ik: (b, iq, h, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+            scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(*operands)
+
+        dk_h, dv_h = pl.pallas_call(
+            functools.partial(_bam_bwd_dkv_kernel, nq=nq, **common),
+            grid=(B, H, nk, nq),
+            in_specs=[
+                pl.BlockSpec((1, block_q), lambda b, h, ik, iq: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, ik, iq: (b, ik)),
+                pl.BlockSpec((1, block_q), lambda b, h, ik, iq: (b, iq)),
+                pl.BlockSpec((1, block_k), lambda b, h, ik, iq: (b, ik)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, ik, iq: (b, iq, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ik, iq, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ik, iq, n_rep=n_rep:
+                             (b, ik, h // n_rep, 0)),
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, ik, iq: (b, iq, h, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, ik, iq: (b, h, iq)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, ik, iq: (b, h, iq)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ik, iq: (b, ik, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, ik, iq: (b, ik, h, 0)),
+            ],
+            out_shape=[jax.ShapeDtypeStruct((B, Tk, H, hd), jnp.float32),
+                       jax.ShapeDtypeStruct((B, Tk, H, hd), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                            pltpu.VMEM((block_k, hd), jnp.float32)],
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(*operands)
+    else:
+        _check_block_map(block_map, block_q, block_k, nq, nk, window)
+        qm, km, qtile, ktile, ktile_full, qrow = _sparse_index_maps(n_rep)
+        in_specs = [
+            pl.BlockSpec((1, block_q), qm),
+            pl.BlockSpec((1, block_k), km),
+            pl.BlockSpec((1, block_q), qm),
+            pl.BlockSpec((1, block_k), km),
+            pl.BlockSpec((1, block_q, 1, hd), qtile),
+            pl.BlockSpec((1, block_k, 1, hd), ktile),
+            pl.BlockSpec((1, block_k, 1, hd), ktile),
+            pl.BlockSpec((1, block_q, 1, hd), qtile),
+            pl.BlockSpec((1, 1, block_q), qrow),
+            pl.BlockSpec((1, 1, block_q), qrow),
+        ]
+        dq = pl.pallas_call(
+            functools.partial(_bam_bwd_dq_kernel_sparse, **common),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=5,
+                grid=(B, H, block_map.n_steps),
+                in_specs=in_specs,
+                out_specs=pl.BlockSpec((1, block_q, 1, hd), qtile),
+                scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(*_prefetch_arrays(block_map, "q"), *operands)
+
+        dk_h, dv_h = pl.pallas_call(
+            functools.partial(_bam_bwd_dkv_kernel_sparse, **common),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=5,
+                grid=(B, H, len(block_map.k_steps)),
+                in_specs=in_specs,
+                out_specs=[pl.BlockSpec((1, block_k, 1, hd), ktile_full),
+                           pl.BlockSpec((1, block_k, 1, hd), ktile_full)],
+                scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                                pltpu.VMEM((block_k, hd), jnp.float32)],
+            ),
+            out_shape=[jax.ShapeDtypeStruct((B, Tk, H, hd), jnp.float32),
+                       jax.ShapeDtypeStruct((B, Tk, H, hd), jnp.float32)],
+            compiler_params=_compiler_params_cls()(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(*_prefetch_arrays(block_map, "k"), *operands)
+
+    # GQA: fold q-head grads back onto shared KV heads
+    if n_rep > 1:
+        dk_h = dk_h.reshape(B, Tk, Hkv, n_rep, hd).sum(axis=3)
+        dv_h = dv_h.reshape(B, Tk, Hkv, n_rep, hd).sum(axis=3)
+    return dq, dk_h.astype(k.dtype), dv_h.astype(v.dtype)

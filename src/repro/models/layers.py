@@ -219,12 +219,18 @@ def attn_project_qkv(p: Params, cfg: ModelConfig, x_q, x_kv):
 
 def run_attention(p: Params, cfg: ModelConfig, x_q, *, x_kv=None, q_pos=None,
                   kv_pos=None, mask=None, mask_fn=None, rope: bool = True,
-                  pos3=None, window: int = 0, kv_override=None):
+                  pos3=None, window: int = 0, kv_override=None, bits=None,
+                  kv_bits=None):
     """Full attention block. ``mask``: [B,1|H,Tq,Tk] bool or None (causal).
     ``mask_fn(start, size)`` enables the q-chunked path
     (cfg.attn_q_chunk) without materializing the full mask.
 
     kv_override: (k, v) already-projected cache tensors (decode path).
+    bits/kv_bits: BAM bitfields [B,T*]; when given and cfg.attn_impl is
+    a kernel impl ("bam_kernel" / "bam_interpret"), attention dispatches
+    to the fused Pallas path (repro.kernels.ops.bam_attention — mask
+    in-registers, LSE residuals, fused backward) with ``window`` as the
+    static sliding window. The decode path (kv_override) stays on XLA.
     """
     x_kv = x_q if x_kv is None else x_kv
     b, tq, _ = x_q.shape
@@ -242,6 +248,17 @@ def run_attention(p: Params, cfg: ModelConfig, x_q, *, x_kv=None, q_pos=None,
             k = apply_rope(k, q_pos, cfg.rope_theta)
     if kv_override is not None:
         k, v = kv_override(k, v)
+    elif cfg.attn_impl != "xla" and bits is not None:
+        # fused Pallas BAM path: GQA folded into the kernel's index
+        # maps, bitfield mask evaluated in-registers, custom_vjp with
+        # (out, lse) residuals — the training hot path.
+        from repro.kernels.ops import auto_block, bam_attention
+        out = bam_attention(
+            q, k, v, bits, bits if kv_bits is None else kv_bits,
+            q_pos, q_pos if kv_pos is None else kv_pos,
+            softcap=cfg.attn_softcap, window=window, impl=cfg.attn_impl,
+            block_q=auto_block(tq), block_k=auto_block(k.shape[1]))
+        return out.reshape(b, tq, cfg.q_dim) @ p["wo"], (k, v)
     # n_rep from the actual tensor: decode caches may carry replicated
     # KV heads (cfg.decode_kv_replicate)
     n_rep = cfg.num_heads // k.shape[2]

@@ -124,10 +124,18 @@ def _block(cfg: ModelConfig, p, x, batch, layer_idx, ffn: Optional[FFN]):
     def mask_fn(start, size):
         return _mask_for(cfg, batch, window, q_slice=(start, size))
 
+    # fused Pallas BAM dispatch needs a *static* window; the gemma2
+    # local/global alternation traces it per layer, so that stays XLA.
+    kernel_bits = None
+    if (cfg.attn_impl != "xla" and batch.get("bits") is not None
+            and not cfg.local_global_pattern):
+        kernel_bits = batch["bits"]
+
     h = L.apply_norm(cfg, p["ln1"], x)
     attn_out, _ = L.run_attention(
         p["attn"], cfg, h, q_pos=batch["positions"], mask_fn=mask_fn,
-        pos3=batch.get("pos3"))
+        pos3=batch.get("pos3"), bits=kernel_bits,
+        window=cfg.sliding_window if kernel_bits is not None else 0)
     if cfg.post_block_norm:
         attn_out = L.apply_norm(cfg, p["post_ln1"], attn_out)
     x = x + attn_out

@@ -92,6 +92,20 @@ def test_token_workload_is_mask_rowsum(seed):
     np.testing.assert_allclose(W, rows)
 
 
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("window", [3, 5, 16])
+def test_token_workload_windowed_is_mask_rowsum(seed, window):
+    """Exact windowed causal count per modality — the old
+    min(total, window) clamp over-subtracted for text rows that also
+    attend modality keys (their row-sum legitimately exceeds window)."""
+    rng = np.random.default_rng(seed + 200)
+    T = 64
+    bits, pos = bam.build_sample_bits(random_segments(rng, T), T)
+    W = bam.token_workload(bits, pos, window=window)
+    rows = brute_force_mask(bits, pos, window=window).sum(axis=1)
+    np.testing.assert_allclose(W, rows)
+
+
 def test_causal_bits_degenerates_to_causal():
     bits = np.asarray(bam.causal_bits(1, 16))[0]
     pos = np.arange(16)
@@ -123,3 +137,50 @@ def test_block_workload_sums_tokens():
     Wb = bam.block_workload(bits, pos, 4)
     assert len(Wb) == 4
     np.testing.assert_allclose(Wb, W.reshape(4, 4).sum(1))
+
+
+# ---------------------------------------------------------------------------
+# Host-side grid compaction (BlockMask — drives the sparse Pallas grid)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_block_map_covers_active_tiles(seed):
+    rng = np.random.default_rng(seed + 300)
+    T, bq, bk = 48, 8, 16
+    bits, pos = bam.build_sample_bits(random_segments(rng, T), T)
+    bm = bam.build_block_map(bits, bits, pos, pos, bq, bk)
+    mask = brute_force_mask(bits, pos)
+    active = mask.reshape(T // bq, bq, T // bk, bk).any(axis=(1, 3))
+    got = {(iq, ik) for iq, ik, _, _, a in bm.q_steps if a}
+    want = {(int(i), int(j)) for i, j in zip(*np.nonzero(active))}
+    assert got == want
+    assert {(iq, ik) for iq, ik, _, _, a in bm.k_steps if a} == want
+    # every q block flushes exactly once; ditto every k block
+    assert sum(s[3] for s in bm.q_steps) == T // bq
+    assert sum(s[3] for s in bm.k_steps) == T // bk
+    assert bm.n_dense_steps == (T // bq) * (T // bk)
+
+
+def test_block_map_empty_blocks_get_dummy_steps():
+    bits = np.zeros(32, np.uint32)
+    bits[:8] = bam.text_token()
+    pos = np.arange(32)
+    bm = bam.build_block_map(bits, bits, pos, pos, 8, 8)
+    # 3 empty q blocks -> inactive flush steps so outputs still write
+    inactive = [s for s in bm.q_steps if s[4] == 0]
+    assert len(inactive) == 3
+    assert all(f == 1 and l == 1 for _, _, f, l, _ in inactive)
+
+
+def test_block_map_batch_is_union():
+    """[B,T] bits: a tile active in ANY row must stay in the grid."""
+    b0, p0 = bam.build_sample_bits([("text", 0, 16)], 32)
+    b1, p1 = bam.build_sample_bits([("text", 0, 32)], 32)
+    bits = np.stack([b0, b1])
+    pos = np.stack([p0, p1])
+    bm = bam.build_block_map(bits, bits, pos, pos, 8, 8)
+    bm1 = bam.build_block_map(b1, b1, p1, p1, 8, 8)
+    active = {(s[0], s[1]) for s in bm.q_steps if s[4]}
+    active1 = {(s[0], s[1]) for s in bm1.q_steps if s[4]}
+    assert active == active1        # row 1 dominates row 0 here
+    assert bm.skip_fraction < 1.0

@@ -169,6 +169,41 @@ def test_gemma2_local_global_masks_differ():
     assert float(jnp.abs(logits - logits2).max()) > 1e-6
 
 
+def test_attn_impl_kernel_matches_xla():
+    """cfg.attn_impl="bam_interpret" routes the transformer's attention
+    through the fused Pallas path (forward AND backward) — logits and
+    parameter grads must match the XLA path."""
+    from repro.configs.base import ModelConfig
+    from repro.core import bam
+    from repro.models import transformer as tf
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", remat=False,
+                      seq_shard_activations=False)
+    T_ = 40
+    bits_np, pos_np = bam.build_sample_bits(
+        [("text", 0, 10), ("mod", 1, 10), ("text", 0, 20)], T_)
+    batch = {"tokens": jnp.zeros((2, T_), jnp.int32),
+             "positions": jnp.broadcast_to(jnp.asarray(pos_np)[None],
+                                           (2, T_)),
+             "bits": jnp.broadcast_to(jnp.asarray(bits_np)[None], (2, T_))}
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    lx, _ = tf.forward(params, cfg, batch)
+    lk, _ = tf.forward(params, cfg.replace(attn_impl="bam_interpret"), batch)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lx),
+                               atol=2e-5, rtol=2e-5)
+
+    def loss(p, c):
+        lg, _ = tf.forward(p, c, batch)
+        return jnp.sum(lg ** 2)
+
+    g1 = jax.grad(loss)(params, cfg)
+    g2 = jax.grad(loss)(params, cfg.replace(attn_impl="bam_interpret"))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=2e-3)
+
+
 def test_vlm_mrope_text_equals_rope():
     """M-RoPE with equal (t,h,w) ids == standard RoPE (text tokens)."""
     from repro.models.layers import apply_mrope, apply_rope
