@@ -15,7 +15,15 @@ Two measurement levels (CPU container, per DESIGN.md):
 
 ``derived`` reports imbalance + LPT speedup over zigzag/ring — the
 paper's Table 4 shows LPT/random ≥ zigzag > naive ring for EE/MP.
+
+Since CP went differentiable, ``cp-bwd/*`` rows time a full
+forward+backward through ``cp_attention`` per method × per-step body
+(dense XLA vs the Pallas stats kernel, interpret mode — ordering check
+on CPU, not TPU perf) and report the analytic backward-memory term
+(dense logits vs (out, lse) flash residuals). Mirrored into
+``BENCH_cp_bwd.json``.
 """
+import os
 import time
 
 import numpy as np
@@ -34,6 +42,8 @@ RANKS = 8
 BLOCK = 128
 PLANNERS = ["lpt", "random", "ring", "zigzag"]
 HEADS, HEAD_DIM = 8, 128   # one Llama-70B attention layer slice
+
+CP_BWD_JSON = os.environ.get("BENCH_CP_BWD_JSON", "BENCH_cp_bwd.json")
 
 
 def full_scale(seq_len: int, mode: str, seeds=range(3)):
@@ -82,6 +92,46 @@ def reduced_scale_measured(mode: str, seq_len: int = 2048):
     return out   # ms
 
 
+def cp_fwd_bwd(smoke: bool = False):
+    """Differentiable-CP rows: forward and forward+backward wall time
+    through ``cp_attention`` for each method × per-step body, plus the
+    analytic backward-memory term. Single-rank mesh (the bodies and
+    their custom_vjps are what is being timed; collectives are
+    identity), reduced scale, interpret-mode kernels."""
+    T = 64 if smoke else 128
+    B, H, hd = 1, 2, 32
+    bits_np, pos_np = random_multimodal_bits(T, "ee", seed=0)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, T, H, hd), jnp.float32)
+    bits = jnp.asarray(bits_np)[None]
+    pos = jnp.asarray(pos_np)[None]
+    mesh = jax.make_mesh((1,), ("cp",))
+    iters = 1 if smoke else 2
+    if os.path.exists(CP_BWD_JSON):
+        os.remove(CP_BWD_JSON)
+    # backward-memory term per rank: the XLA body re-materializes the
+    # [B,H,Tq,Tk] f32 logits per step; the kernel body saves only the
+    # (out, lse) flash residuals
+    mem_xla = B * H * T * T * 4
+    mem_kernel = B * H * T * 4 + B * T * H * hd * 4
+    for method in ("allgather", "ring"):
+        for impl in ("xla", "bam_interpret"):
+            def fwd(q):
+                return cp.cp_attention(
+                    mesh, "cp", q, q, q, bits, bits, pos, pos,
+                    method=method, impl=impl, block_q=32, block_k=32)
+
+            grad_fn = jax.jit(jax.grad(lambda q: jnp.sum(fwd(q) ** 2)))
+            us_f = timeit(jax.jit(fwd), q, iters=iters, warmup=1)
+            us_b = timeit(grad_fn, q, iters=iters, warmup=1)
+            mem = mem_xla if impl == "xla" else mem_kernel
+            emit(f"cp-bwd/{method}-{impl}-T{T}", us_b,
+                 f"fwd_us={us_f:.1f};bwd_bytes={mem};"
+                 f"mem_vs_xla={mem_xla / mem:.1f}x",
+                 json_path=CP_BWD_JSON, method=method, impl=impl,
+                 seq_len=T, fwd_us=round(us_f, 1), bwd_bytes=mem)
+
+
 def run(smoke: bool = False):
     rows = []
     seq_lens = (4096,) if smoke else (16384, 32768, 65536)
@@ -106,6 +156,7 @@ def run(smoke: bool = False):
         us = (time.perf_counter() - t0) * 1e6
         emit(f"table4-densecontrol/T{ctrl_seq}-{mode}", us,
              ";".join(f"{m}_ms={ms[m]:.2f}" for m in PLANNERS))
+    cp_fwd_bwd(smoke=smoke)
     return rows
 
 

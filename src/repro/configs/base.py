@@ -139,6 +139,16 @@ class ModelConfig:
     # softmax over q blocks): peak memory O(chunk·T) instead of O(T^2).
     # 0 = off. Set for prefill_32k (§Perf-D).
     attn_q_chunk: int = 0
+    # context parallelism (Cornstarch §4.3): when cp_mesh is set (a
+    # jax.sharding.Mesh), run_attention dispatches BAM attention through
+    # core.context_parallel.cp_attention, sharding the token axis over
+    # mesh axis cp_axis with the attn_impl-selected per-step body. The
+    # batch must already be permuted to the ContextPlan layout
+    # (training.steps.make_cp_train_step does this). Runtime handles —
+    # never serialized; thread them per-step via cfg.replace(...).
+    cp_mesh: Any = None
+    cp_axis: str = "cp"
+    cp_method: str = "allgather"   # allgather | ring
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -119,6 +119,17 @@ def causal_bits(batch: int, seq: int, dtype=jnp.uint32):
     return jnp.full((batch, seq), text_token(), dtype)
 
 
+def repeat_kv(k, n_rep: int):
+    """GQA head expansion [B, T, Hkv, hd] -> [B, T, Hkv*n_rep, hd] —
+    the dense-path pairing of the kernel's index-map head fold (shared
+    by models.layers and the CP XLA bodies)."""
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d))
+    return k.reshape(b, t, h * n_rep, d)
+
+
 # ---------------------------------------------------------------------------
 # Per-token workload (row-sums of the mask) — O(T * M) via per-modality
 # cumulative counts, no O(T^2) materialization. Used by the token

@@ -101,6 +101,32 @@ def _bwd_vjp(softcap, window, impl, block_q, block_k, block_map, res, g):
         return dq, dk, dv, None, None, None, None
 
     # Fused kernel backward from the (out, lse) residuals.
+    dq, dk, dv = bam_attention_chunk_bwd(
+        q, k, v, out, g, lse, q_bits, kv_bits, q_pos, kv_pos,
+        softcap=softcap, window=window, impl=impl, block_q=block_q,
+        block_k=block_k, block_map=block_map)
+    return dq, dk, dv, None, None, None, None
+
+
+def bam_attention_chunk_bwd(q, k, v, out, g, lse, q_bits, kv_bits, q_pos,
+                            kv_pos, *, softcap: float = 0.0,
+                            window: int = 0, impl: str = "bam_interpret",
+                            block_q: int = 128, block_k: int = 128,
+                            block_map=None):
+    """Fused flash backward from (out, lse) residuals — the building
+    block both the single-device ``bam_attention`` VJP and the
+    context-parallel chunk backwards share.
+
+    The combining-aware property: ``(out, lse)`` need not come from
+    attention over THIS ``k``/``v`` chunk alone — pass the cross-chunk
+    COMBINED output and log-sum-exp (CP: derived from the merged
+    ``(m, l)`` stats) and the result is this chunk's exact contribution
+    to the global-softmax gradients: ``dq`` sums over chunks; ``dk``/
+    ``dv`` (GQA-folded to [B, Tk, Hkv, hd]) are complete per chunk. Runs
+    the fused Pallas dQ / dK-dV kernels; no O(Tq·Tk) intermediate is
+    ever traced. Handles non-block-multiple lengths by bits=0 / pos=-1
+    padding, like the forward."""
+    assert impl in ("bam_kernel", "bam_interpret"), impl
     Tq, Tk = q.shape[1], k.shape[1]
     qp, kp_, vp, qbp, kbp, qpp, kpp = _pad_all(
         q, k, v, q_bits, kv_bits, q_pos, kv_pos, block_q, block_k)
@@ -113,7 +139,7 @@ def _bwd_vjp(softcap, window, impl, block_q, block_k, block_map, res, g):
         qp, kp_, vp, outp, gp, lsep, qbp, kbp, qpp, kpp,
         softcap=softcap, window=window, block_q=block_q, block_k=block_k,
         block_map=block_map, interpret=(impl == "bam_interpret"))
-    return (dq[:, :Tq], dk[:, :Tk], dv[:, :Tk], None, None, None, None)
+    return dq[:, :Tq], dk[:, :Tk], dv[:, :Tk]
 
 
 _bam_attention.defvjp(_fwd_vjp, _bwd_vjp)
@@ -156,8 +182,13 @@ def bam_attention_stats(q, k, v, q_bits, kv_bits, q_pos=None, kv_pos=None, *,
     """Unnormalized flash-attention partials for cross-chunk combination
     (context parallelism): returns (acc [B,H,Tq,hd] f32 = sum p·V,
     m [B,H,Tq], l [B,H,Tq]) with the bitfield mask evaluated in-kernel —
-    no [B,H,Tq,Tk] logits in HBM. Forward-only (the CP bodies are
-    combined outside; training gradients flow through ``bam_attention``).
+    no [B,H,Tq,Tk] logits in HBM. This op is a forward building block
+    with no VJP of its own: the combine happens OUTSIDE (the CP bodies),
+    so gradients are defined there — ``core.context_parallel``'s
+    combining-aware custom_vjps derive (out, lse) from the merged
+    (m, l) and drive ``bam_attention_chunk_bwd`` per chunk. Don't
+    ``jax.grad`` through this op directly; grad through
+    ``cp_attention`` (or ``bam_attention`` single-device) instead.
     """
     assert impl in ("bam_kernel", "bam_interpret"), impl
     B, Tq = q.shape[:2]

@@ -120,13 +120,7 @@ def apply_mrope(x, pos3, sections, theta: float):
 # source of truth for mask semantics.
 # ---------------------------------------------------------------------------
 
-def repeat_kv(k, n_rep: int):
-    """[B, T, Hkv, hd] -> [B, T, Hkv*n_rep, hd]."""
-    if n_rep == 1:
-        return k
-    b, t, h, d = k.shape
-    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d))
-    return k.reshape(b, t, h * n_rep, d)
+from repro.core.bam import repeat_kv  # noqa: E402  (shared GQA expand)
 
 
 def sdpa(q, k, v, mask, *, softcap: float = 0.0, scale: Optional[float] = None):
@@ -231,6 +225,13 @@ def run_attention(p: Params, cfg: ModelConfig, x_q, *, x_kv=None, q_pos=None,
     to the fused Pallas path (repro.kernels.ops.bam_attention — mask
     in-registers, LSE residuals, fused backward) with ``window`` as the
     static sliding window. The decode path (kv_override) stays on XLA.
+
+    Context parallelism: when ``cfg.cp_mesh`` is set and bits are
+    given, attention dispatches to ``core.context_parallel
+    .cp_attention`` instead — the token axis shards over
+    ``cfg.cp_axis``, per-step math follows ``cfg.attn_impl``, and the
+    combining-aware custom_vjp keeps the whole thing differentiable.
+    Inputs must already be permuted to the ContextPlan layout.
     """
     x_kv = x_q if x_kv is None else x_kv
     b, tq, _ = x_q.shape
@@ -248,6 +249,17 @@ def run_attention(p: Params, cfg: ModelConfig, x_q, *, x_kv=None, q_pos=None,
             k = apply_rope(k, q_pos, cfg.rope_theta)
     if kv_override is not None:
         k, v = kv_override(k, v)
+    elif cfg.cp_mesh is not None and bits is not None:
+        # context-parallel dispatch: global arrays in plan layout, the
+        # token axis shard_map'd over cfg.cp_axis; differentiable on
+        # every impl (combining-aware custom_vjp in the CP bodies).
+        from repro.core.context_parallel import cp_attention
+        out = cp_attention(
+            cfg.cp_mesh, cfg.cp_axis, q, k, v, bits,
+            bits if kv_bits is None else kv_bits, q_pos,
+            q_pos if kv_pos is None else kv_pos, method=cfg.cp_method,
+            softcap=cfg.attn_softcap, window=window, impl=cfg.attn_impl)
+        return out.reshape(b, tq, cfg.q_dim) @ p["wo"], (k, v)
     elif cfg.attn_impl != "xla" and bits is not None:
         # fused Pallas BAM path: GQA folded into the kernel's index
         # maps, bitfield mask evaluated in-registers, custom_vjp with

@@ -124,10 +124,13 @@ def _block(cfg: ModelConfig, p, x, batch, layer_idx, ffn: Optional[FFN]):
     def mask_fn(start, size):
         return _mask_for(cfg, batch, window, q_slice=(start, size))
 
-    # fused Pallas BAM dispatch needs a *static* window; the gemma2
-    # local/global alternation traces it per layer, so that stays XLA.
+    # fused Pallas BAM / context-parallel dispatch needs a *static*
+    # window; the gemma2 local/global alternation traces it per layer,
+    # so that stays XLA (a cp_mesh is ignored there: each device then
+    # computes full attention — correct, just not context-parallel).
     kernel_bits = None
-    if (cfg.attn_impl != "xla" and batch.get("bits") is not None
+    if ((cfg.attn_impl != "xla" or cfg.cp_mesh is not None)
+            and batch.get("bits") is not None
             and not cfg.local_global_pattern):
         kernel_bits = batch["bits"]
 

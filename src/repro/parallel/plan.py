@@ -174,6 +174,19 @@ class ContextPlan:
         """Per-rank token index arrays (plan layout)."""
         return self.core_plan().rank_token_slices()
 
+    def apply(self, seq_len: int) -> Dict[str, Any]:
+        """CP runtime layout for one merged sequence: the plan's token
+        permutation (CP layout <- original; a true permutation of
+        ``arange(seq_len)``), its inverse, and the rank count — exactly
+        what ``repro.training.steps.make_cp_train_step`` consumes.
+        Raises ``ValueError`` if the plan's blocks do not cover
+        ``seq_len``."""
+        from repro.core import context_parallel as cp
+        perm = cp.plan_permutation(self.core_plan(), seq_len)
+        return {"perm": perm, "inv_perm": cp.invert_perm(perm),
+                "num_ranks": self.num_ranks,
+                "block_size": self.block_size}
+
 
 # ---------------------------------------------------------------------------
 # Executor-contract construction (shared by MLLMParallelPlan.apply and

@@ -11,6 +11,13 @@ sequence (the memory-roofline lever recorded in EXPERIMENTS.md §Perf).
 
 ``make_mllm_train_step(mllm)`` -> the Cornstarch path: frozen-aware
 MLLM training (encoders + projectors + LLM with frozen masking).
+
+``make_cp_train_step(cfg, layout, mesh)`` -> context-parallel training
+(Cornstarch §4.3): the batch is permuted to a ``ContextPlan`` token
+layout (``layout = plan.context.apply(seq_len)``), attention runs
+through the differentiable CP bodies under ``mesh``, and loss + grads
+come out identical to the unpermuted step (cross-entropy is
+permutation-invariant, CP attention is exact).
 """
 from __future__ import annotations
 
@@ -106,6 +113,81 @@ def make_train_step(cfg: ModelConfig, ocfg: Optional[opt.AdamWConfig] = None,
                     frozen_mask=None):
     ocfg = ocfg or opt.AdamWConfig()
     loss_fn = make_loss_fn(cfg)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = opt.update(ocfg, grads, opt_state, params,
+                                           frozen_mask)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel train step (Cornstarch §4.3: train THROUGH the CP
+# bodies — attention gradients cross ranks via the combining-aware
+# custom_vjps in core.context_parallel)
+# ---------------------------------------------------------------------------
+
+#: batch keys whose token axis follows the CP permutation -> token axis
+#: (pos3 is [3, B, T] — M-RoPE position ids travel with their tokens)
+_CP_TOKEN_KEYS = {"tokens": 1, "labels": 1, "positions": 1, "bits": 1,
+                  "valid": 1, "inputs_embeds": 1, "embed_mask": 1,
+                  "pos3": 2}
+
+
+def make_cp_train_step(cfg: ModelConfig, layout, mesh,
+                       ocfg: Optional[opt.AdamWConfig] = None, *,
+                       axis_name: str = "cp", method: str = "allgather",
+                       frozen_mask=None):
+    """Context-parallel LM train step.
+
+    ``layout`` is ``ContextPlan.apply(seq_len)``'s dict (``perm``,
+    ``inv_perm``, ``num_ranks``): the step permutes every token-axis
+    batch array into plan layout, then runs the ordinary loss with
+    ``cfg`` rewired so attention dispatches through
+    ``core.context_parallel.cp_attention`` over ``mesh``'s
+    ``axis_name`` axis (per-step math = ``cfg.attn_impl``; ``method``
+    picks allgather vs ring). Because the permutation rides every
+    per-token tensor and CP attention is exact, loss and grads match
+    ``make_train_step`` on the unpermuted batch.
+    """
+    ocfg = ocfg or opt.AdamWConfig()
+    perm = jnp.asarray(layout["perm"])
+    n_dev = mesh.shape[axis_name]
+    if len(layout["perm"]) % n_dev != 0:
+        raise ValueError(
+            f"seq_len {len(layout['perm'])} is not divisible by the "
+            f"{n_dev}-device {axis_name!r} mesh axis; pad the sequence "
+            f"to a rank multiple before planning")
+    if layout["num_ranks"] != n_dev:
+        # math stays exact on any mesh size (shard_map just re-slices
+        # the permuted axis), but the plan's workload balance only
+        # holds when rank slices align with devices — say so
+        import warnings
+        warnings.warn(
+            f"ContextPlan was balanced for {layout['num_ranks']} ranks "
+            f"but the {axis_name!r} mesh axis has {n_dev} devices; "
+            f"results are exact but the planned load balance is lost",
+            stacklevel=2)
+    cp_cfg = cfg.replace(cp_mesh=mesh, cp_axis=axis_name,
+                         cp_method=method, attn_q_chunk=0)
+    loss_inner = make_loss_fn(cp_cfg)
+
+    def loss_fn(params, batch):
+        if batch.get("bits") is None:
+            # without bits run_attention cannot dispatch to
+            # cp_attention — every device would replicate the full
+            # dense attention and nothing would be context-parallel
+            raise ValueError(
+                "make_cp_train_step needs batch['bits'] (BAM "
+                "bitfields); use bam.causal_bits for pure-text batches")
+        pb = dict(batch)
+        for key, axis in _CP_TOKEN_KEYS.items():
+            if pb.get(key) is not None:
+                pb[key] = jnp.take(pb[key], perm, axis=axis)
+        return loss_inner(params, pb)
 
     def step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(
