@@ -27,11 +27,15 @@ A final scenario goes through the typed API: ``repro.parallel.
 search_plan`` picks the joint winner for a small frozen-encoder MLLM
 and its pinned (schedule, virtual_chunks) pair is validated the same
 way — the memory harness covers exactly what ``parallelize`` emits.
+That scenario also times ``repro.analysis.schedlint`` over the same
+plan + timeline (the static gate the launcher runs before step 0) and
+asserts it comes back clean.
 """
 import time
 
 import numpy as np
 
+from repro.analysis import schedlint
 from repro.core import pipeline as pp
 from repro.core.schedule import (SCHEDULES, Stage, chain_graph,
                                  refine_chain, validate_schedule_memory)
@@ -66,7 +70,7 @@ def validate_searched_plan():
                            trainable_upstream=True)
     plan = search_plan([enc], llm, ClusterSpec(num_devices=4),
                        WorkloadShape(num_microbatches=MICROBATCHES))
-    graph, _sim = pp.simulate_plan(
+    graph, sim = pp.simulate_plan(
         [enc], llm, list(plan.stage.encoder_stages),
         plan.stage.llm_stages, MICROBATCHES,
         schedule=plan.schedule.name,
@@ -83,6 +87,16 @@ def validate_searched_plan():
          f"exec_peak={max(rep['executor_peaks'])};"
          f"cap={max(rep['caps'])};"
          f"plan_bubble={plan.schedule.bubble_fraction:.3f};match=1")
+    # the static gate over the same artifacts: how long the launcher's
+    # pre-step-0 schedlint pass costs, and that the winner is clean
+    t0 = time.perf_counter()
+    found = schedlint.lint_plan(plan) + schedlint.lint_timeline(graph,
+                                                                sim)
+    lint_us = (time.perf_counter() - t0) * 1e6
+    assert not found, [str(f) for f in found]
+    emit(f"schedlint/plan-{plan.schedule.name}-d{plan.pp_devices}",
+         lint_us,
+         f"findings=0;items={len(sim['items'])};clean=1")
     return rep
 
 

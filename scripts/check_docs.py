@@ -44,23 +44,36 @@ def main() -> int:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    failures = 0
+    failures = []                 # (file, line, reason) — ALL of them
     total = 0
     for doc in docs:
         rel = os.path.relpath(doc, REPO)
         for start, code in extract_python_blocks(doc):
             total += 1
-            proc = subprocess.run([sys.executable, "-c", code],
-                                  env=env, capture_output=True,
-                                  text=True, timeout=600)
+            try:
+                proc = subprocess.run([sys.executable, "-c", code],
+                                      env=env, capture_output=True,
+                                      text=True, timeout=600)
+            except subprocess.TimeoutExpired:
+                # a hanging block must not abort the run — record it
+                # and keep checking the rest
+                failures.append((rel, start, "timed out after 600s"))
+                sys.stderr.write(
+                    f"FAIL {rel}: block at line {start} timed out\n")
+                continue
             if proc.returncode != 0:
-                failures += 1
+                failures.append((rel, start,
+                                 f"exit code {proc.returncode}"))
                 sys.stderr.write(
                     f"FAIL {rel}: block at line {start}\n"
                     f"{proc.stdout}{proc.stderr}\n")
             else:
                 print(f"ok   {rel}: block at line {start}")
-    print(f"{total - failures}/{total} doc blocks ran cleanly")
+    print(f"{total - len(failures)}/{total} doc blocks ran cleanly")
+    if failures:
+        sys.stderr.write("failing blocks:\n" + "".join(
+            f"  {rel}:{start}  ({reason})\n"
+            for rel, start, reason in failures))
     return 1 if failures or total == 0 else 0
 
 

@@ -1,0 +1,37 @@
+"""repro.analysis: findings-based static analysis for the repro stack.
+
+Three pass families over one :class:`Finding` spine:
+
+* :mod:`repro.analysis.jaxprlint`   — traced-program invariants
+  (no-quadratic-intermediate, peak-live-bytes, dtype-drift)
+* :mod:`repro.analysis.schedlint`   — F/B/W timeline + plan validation
+  (ordering, overlap, frozen stages, activation caps, send/recv
+  deadlock, plan consistency)
+* :mod:`repro.analysis.kernellint`  — Pallas kernel source checks
+  (BlockSpec arity/rank, block divisibility, block-map coverage,
+  scalar-prefetch staticness)
+
+CLI: ``python -m repro.analysis [--strict] [--rule R] [--entrypoint E]``
+runs every registered entrypoint and exits nonzero on gated findings.
+"""
+from .findings import (Finding, RuleSpec, RULES, Severity, filter_findings,
+                       finding, format_findings, gate, register_rule)
+from .jaxprlint import (check_dtype_drift, check_no_quadratic_intermediate,
+                        check_peak_live_bytes, collect_avals, iter_jaxprs,
+                        peak_live_bytes, quadratic_f32)
+from .kernellint import (check_block_divisibility, check_block_map_coverage,
+                         check_scalar_prefetch_static, lint_file,
+                         lint_kernels, lint_source)
+from .schedlint import lint_executor_contract, lint_plan, lint_timeline
+
+__all__ = [
+    "Finding", "RuleSpec", "RULES", "Severity", "filter_findings",
+    "finding", "format_findings", "gate", "register_rule",
+    "check_dtype_drift", "check_no_quadratic_intermediate",
+    "check_peak_live_bytes", "collect_avals", "iter_jaxprs",
+    "peak_live_bytes", "quadratic_f32",
+    "check_block_divisibility", "check_block_map_coverage",
+    "check_scalar_prefetch_static", "lint_file", "lint_kernels",
+    "lint_source",
+    "lint_executor_contract", "lint_plan", "lint_timeline",
+]

@@ -1,0 +1,84 @@
+"""``python -m repro.analysis``: the static-analysis gate.
+
+Runs every named entrypoint (see :mod:`repro.analysis.entrypoints`)
+and exits nonzero when the findings gate trips — ERROR findings
+always, WARNING findings too under ``--strict``. ``--rule`` /
+``--entrypoint`` narrow the run; ``--list`` prints the registries.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from typing import List
+
+from .entrypoints import ENTRYPOINTS
+from .findings import (Finding, RULES, Severity, filter_findings, finding,
+                       format_findings, gate, register_rule)
+
+register_rule("entrypoint-crash", "cli",
+              "an analysis entrypoint raised instead of returning "
+              "findings")
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis over the repro training stack")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on WARNING findings too")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="RULE",
+                    help="only report these rule ids (repeatable)")
+    ap.add_argument("--entrypoint", action="append", default=None,
+                    metavar="NAME", choices=sorted(ENTRYPOINTS),
+                    help="only run these entrypoints (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list entrypoints and rules, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("entrypoints:")
+        for name, fn in ENTRYPOINTS.items():
+            doc = (fn.__doc__ or "").strip().split("\n")[0]
+            print(f"  {name:<18} {doc}")
+        print("rules:")
+        for name, spec in sorted(RULES.items()):
+            print(f"  {name:<28} [{spec.family}/"
+                  f"{spec.default_severity.name.lower()}] "
+                  f"{spec.description}")
+        return 0
+
+    names = args.entrypoint or list(ENTRYPOINTS)
+    findings: List[Finding] = []
+    for name in names:
+        try:
+            findings.extend(ENTRYPOINTS[name]())
+        except Exception:
+            findings.append(finding(
+                "entrypoint-crash", name,
+                traceback.format_exc(limit=8).strip()))
+    if args.rule:
+        try:
+            findings = filter_findings(findings, args.rule)
+        except KeyError as e:
+            ap.error(str(e))
+
+    gated = [f for f in findings
+             if f.severity is Severity.ERROR
+             or (args.strict and f.severity is Severity.WARNING)]
+    info = [f for f in findings if f not in gated]
+    if info:
+        print(format_findings(info, header="notes (not gated):"))
+    if gated:
+        print(format_findings(
+            gated, header=f"{len(gated)} finding(s) failed the gate:"))
+        return 1
+    print(f"repro.analysis: clean "
+          f"({len(names)} entrypoint(s), {len(findings)} note(s), "
+          f"strict={'on' if args.strict else 'off'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,223 @@
+"""jaxpr lint: traced-program invariants for the kernel hot paths.
+
+The shared traversal here is the promotion of the ``_walk_avals``
+helpers that used to be copy-pasted across ``tests/test_kernels.py``
+and ``tests/test_context_parallel.py``: it recurses into every
+sub-jaxpr a primitive carries (pjit, scan, while, shard_map,
+custom_vjp, pallas_call, ...), whether stored as a raw ``Jaxpr``, a
+``ClosedJaxpr``, or a list/tuple of either.
+
+Rules:
+
+* ``no-quadratic-intermediate`` — the fused BAM backward must never
+  materialize an O(Tq*Tk) f32 buffer; only [block_q, block_k] tiles may
+  exist inside the kernels. The XLA attention path is the discriminating
+  control: it *does* trace a [T, T] f32 intermediate, so the rule is
+  proven non-vacuous wherever it is enforced.
+* ``peak-live-bytes`` — a linear-scan liveness walk over the top-level
+  eqns bounds the peak residual bytes a traced step holds at once;
+  gated against a byte budget when one is given, reported as INFO
+  otherwise.
+* ``dtype-drift`` — large tensors silently upcast to f32 in a bf16/f16
+  path (``convert_element_type`` eqns above a size threshold). Small
+  upcasts (softmax stats, per-tile accumulators) are deliberate and
+  stay below the threshold.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Iterator, List, Optional, Tuple
+
+from .findings import Finding, Severity, finding, register_rule
+
+register_rule(
+    "no-quadratic-intermediate", "jaxprlint",
+    "kernel-path backward jaxprs must carry no O(Tq*Tk) f32 buffer")
+register_rule(
+    "peak-live-bytes", "jaxprlint",
+    "liveness-scan peak residual bytes of a traced step must stay "
+    "inside the byte budget")
+register_rule(
+    "dtype-drift", "jaxprlint",
+    "large low-precision tensors must not silently upcast to f32",
+    default_severity=Severity.WARNING)
+
+AvalRecord = Tuple[str, Tuple[int, ...], Any]
+
+
+def _as_jaxpr(obj: Any):
+    """Raw ``Jaxpr`` from a Jaxpr / ClosedJaxpr / anything else."""
+    inner = getattr(obj, "jaxpr", None)
+    if hasattr(inner, "eqns"):
+        return inner                                 # ClosedJaxpr
+    if hasattr(obj, "eqns"):
+        return obj                                   # raw Jaxpr
+    return None
+
+
+def iter_jaxprs(jaxpr: Any) -> Iterator[Any]:
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params
+    (pjit/scan/while/shard_map/custom_vjp/pallas_call, nested to any
+    depth). Accepts a Jaxpr or ClosedJaxpr."""
+    top = _as_jaxpr(jaxpr)
+    if top is None:
+        return
+    yield top
+    for eqn in top.eqns:
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for item in vals:
+                sub = _as_jaxpr(item)
+                if sub is not None:
+                    yield from iter_jaxprs(sub)
+
+
+def collect_avals(jaxpr: Any) -> List[AvalRecord]:
+    """Every (primitive name, shape, dtype) produced anywhere in the
+    jaxpr, sub-jaxprs included — the promoted ``_walk_avals``."""
+    seen: List[AvalRecord] = []
+    for sub in iter_jaxprs(jaxpr):
+        for eqn in sub.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    seen.append((eqn.primitive.name, tuple(aval.shape),
+                                 getattr(aval, "dtype", None)))
+    return seen
+
+
+def quadratic_f32(jaxpr: Any, seq_len: int) -> List[AvalRecord]:
+    """All f32 avals with >= 2 dims of size >= ``seq_len`` — the
+    O(Tq*Tk) intermediates the fused kernels exist to avoid (the
+    promoted ``_quadratic_f32`` test helper)."""
+    import jax.numpy as jnp
+    return [s for s in collect_avals(jaxpr)
+            if s[2] == jnp.float32
+            and sum(1 for d in s[1] if d >= seq_len) >= 2]
+
+
+def check_no_quadratic_intermediate(jaxpr: Any, seq_len: int,
+                                    location: str) -> List[Finding]:
+    return [finding("no-quadratic-intermediate", location,
+                    f"{prim} produces f32{list(shape)} — an O(Tq*Tk) "
+                    f"intermediate at seq_len={seq_len}")
+            for prim, shape, _dt in quadratic_f32(jaxpr, seq_len)]
+
+
+# ---------------------------------------------------------------------------
+# peak-live-bytes: linear-scan liveness over the top-level eqns
+# ---------------------------------------------------------------------------
+
+def _nbytes(aval: Any) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    try:
+        return math.prod(int(d) for d in shape) * dtype.itemsize
+    except TypeError:                     # symbolic dims
+        return 0
+
+
+def peak_live_bytes(jaxpr: Any) -> int:
+    """Peak bytes simultaneously live across the TOP-LEVEL eqns of
+    ``jaxpr`` (inputs + consts counted; sub-jaxpr internals are the
+    callee's business — scan/pjit bodies are already bounded by their
+    own invars/outvars, which this walk does see).
+
+    A var is live from the eqn that produces it (or from entry, for
+    invars/constvars) until its last top-level use; jaxpr outvars stay
+    live to the end. This is the same linear scan a register allocator
+    runs — an upper bound on residual memory that is exact when XLA
+    performs no rematerialization or buffer aliasing.
+    """
+    top = _as_jaxpr(jaxpr)
+    if top is None:
+        raise TypeError(f"not a jaxpr: {jaxpr!r}")
+    n = len(top.eqns)
+    last_use: dict = {}
+    for i, eqn in enumerate(top.eqns):
+        for var in eqn.invars:
+            if hasattr(var, "aval") and not hasattr(var, "val"):
+                last_use[var] = i
+    for var in top.outvars:
+        if hasattr(var, "aval") and not hasattr(var, "val"):
+            last_use[var] = n
+    live = 0
+    frees: List[List[Any]] = [[] for _ in range(n + 1)]
+    for var, i in last_use.items():
+        frees[i].append(var)
+    alive = set()
+    for var in list(top.invars) + list(top.constvars):
+        if var in last_use and var not in alive:
+            alive.add(var)
+            live += _nbytes(var.aval)
+    peak = live
+    for i, eqn in enumerate(top.eqns):
+        transient = 0                    # produced but never read again
+        for var in eqn.outvars:
+            if var in last_use and var not in alive:
+                alive.add(var)
+                live += _nbytes(var.aval)
+            elif var not in last_use and hasattr(var, "aval"):
+                transient += _nbytes(var.aval)
+        peak = max(peak, live + transient)
+        for var in frees[i]:
+            if var in alive:
+                alive.discard(var)
+                live -= _nbytes(var.aval)
+    return peak
+
+
+def check_peak_live_bytes(jaxpr: Any, location: str, *,
+                          budget_bytes: Optional[int] = None
+                          ) -> List[Finding]:
+    peak = peak_live_bytes(jaxpr)
+    if budget_bytes is None:
+        return [finding("peak-live-bytes", location,
+                        f"peak live bytes (liveness scan): {peak}",
+                        severity=Severity.INFO)]
+    if peak > budget_bytes:
+        return [finding("peak-live-bytes", location,
+                        f"peak live bytes {peak} exceed the budget "
+                        f"{budget_bytes}")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# dtype-drift: unexpected f32 upcasts of large tensors
+# ---------------------------------------------------------------------------
+
+_LOW_PRECISION = ("bfloat16", "float16")
+
+
+def check_dtype_drift(jaxpr: Any, location: str, *,
+                      min_elements: int = 1 << 16) -> List[Finding]:
+    """Flag ``convert_element_type`` eqns that upcast a bf16/f16 tensor
+    of >= ``min_elements`` elements to f32 — the silent memory doubling
+    a mixed-precision path must opt into explicitly. Tile-sized
+    accumulator upcasts inside kernels stay below the threshold."""
+    import jax.numpy as jnp
+    out: List[Finding] = []
+    for sub in iter_jaxprs(jaxpr):
+        for eqn in sub.eqns:
+            if eqn.primitive.name != "convert_element_type":
+                continue
+            if not eqn.invars or not eqn.outvars:
+                continue
+            src = getattr(eqn.invars[0], "aval", None)
+            dst = getattr(eqn.outvars[0], "aval", None)
+            if src is None or dst is None:
+                continue
+            if str(getattr(src, "dtype", "")) not in _LOW_PRECISION:
+                continue
+            if getattr(dst, "dtype", None) != jnp.float32:
+                continue
+            elems = math.prod(int(d) for d in dst.shape) \
+                if dst.shape else 1
+            if elems >= min_elements:
+                out.append(finding(
+                    "dtype-drift", location,
+                    f"{src.dtype}{list(src.shape)} upcast to "
+                    f"f32 ({elems} elements >= {min_elements})"))
+    return out

@@ -233,7 +233,7 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     zero for stages the schedule assigns no W/B-glued weight work),
     peak_activations_per_device, peak_w_residuals_per_device.
     """
-    from repro.core.schedule.simulator import is_chain
+    from repro.core.schedule.simulator import is_chain, item_id
 
     assert is_chain(graph), \
         "execute_schedule replays chain pipelines (one pred per stage)"
@@ -261,19 +261,27 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     peak = [0] * D
     w_peak = [0] * D
     loss = 0.0
+    # per-item measurement: (item_id, device, live activations on that
+    # device AFTER the item ran) — the ids are
+    # ``core.schedule.simulator.item_id`` strings, shared with
+    # schedlint findings and MemoryModelMismatch diffs
+    trace: List[tuple] = []
+    act_nbytes = 0
 
     def store_count(d):
         # measure the CONTAINER, not a parallel counter: the peak is
         # however many entries the store truly holds for device d
         return sum(1 for (s_, _m) in store if device_of[s_] == d)
 
-    for start, _end, dev, kind, s, m in items:
+    for item in items:
+        start, _end, dev, kind, s, m = item
         st = graph.stages[s]
         if kind == "F":
             x = transit.pop((s, m)) if s > 0 else microbatches[m]
             if devices is not None:
                 x = jax.device_put(x, devices[dev])
             store[(s, m)] = x
+            act_nbytes = max(act_nbytes, int(getattr(x, "nbytes", 0)))
             peak[dev] = max(peak[dev], store_count(dev))
             y = stage_fn(params[s], x)
             if s == S - 1:
@@ -308,6 +316,7 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
             _, vjp_p = jax.vjp(lambda pp: stage_fn(pp, x), params[s])
             (gp,) = vjp_p(g)
             grads[s] = jax.tree.map(jnp.add, grads[s], gp)
+        trace.append((item_id(item), dev, store_count(dev)))
 
     assert not store and not w_store and not transit, \
         "schedule left live activations behind (incomplete timeline)"
@@ -318,6 +327,8 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
         "param_grads": jax.tree.map(lambda *xs: jnp.stack(xs), *grads),
         "peak_activations_per_device": peak,
         "peak_w_residuals_per_device": w_peak,
+        "activation_trace": trace,
+        "activation_nbytes": act_nbytes,
     }
 
 

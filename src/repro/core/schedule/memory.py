@@ -45,15 +45,65 @@ bubble papers' explicit memory-vs-bubble trade-off.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .graph import PipelineGraph
 from .schedulers import get_scheduler
+from .simulator import item_id
 
 
 class MemoryModelMismatch(AssertionError):
     """The simulator's activation-memory claim diverged from the
-    executor's measurement (or breached its own cap)."""
+    executor's measurement (or breached its own cap). Carries the
+    per-item timeline diff: ``first_divergence`` is ``(item_id,
+    simulated_live, replayed_live, simulated_bytes, replayed_bytes)``
+    for the first item where the model and the measurement disagree
+    (None when the timelines agree and only the summary claim is
+    wrong). Item ids are ``simulator.item_id`` strings — the same
+    anchors ``repro.analysis.schedlint`` findings use."""
+
+    def __init__(self, message: str,
+                 first_divergence: Optional[Tuple] = None):
+        super().__init__(message)
+        self.first_divergence = first_divergence
+
+
+def simulated_activation_trace(graph: PipelineGraph,
+                               sim: Dict[str, object]) -> List[tuple]:
+    """The simulator-side per-item activation walk, in replay order:
+    ``(item_id, device, live_after)`` per item — +1 at F, -1 at B on
+    the stage's device, exactly the model ``execute_schedule`` measures
+    against (its ``activation_trace`` return uses the same ids)."""
+    device_of = list(sim["device_of"])  # type: ignore[arg-type]
+    occ: Dict[int, int] = {}
+    trace: List[tuple] = []
+    for item in sim["items"]:           # type: ignore[union-attr]
+        _s0, _e0, dev, kind, s, _m = item
+        d = device_of[s]
+        if kind == "F":
+            occ[d] = occ.get(d, 0) + 1
+        elif kind == "B":
+            occ[d] = occ.get(d, 0) - 1
+        trace.append((item_id(item), dev, occ.get(dev, 0)))
+    return trace
+
+
+def diff_activation_traces(sim_trace: Sequence[tuple],
+                           exe_trace: Sequence[tuple],
+                           nbytes: int) -> Optional[Tuple]:
+    """First item where the simulated walk and the replayed measurement
+    disagree, as ``(item_id, sim_live, exe_live, sim_bytes,
+    exe_bytes)``; None when they agree item-for-item."""
+    for (sid, _sd, sc), (eid, _ed, ec) in zip(sim_trace, exe_trace):
+        if sid != eid or sc != ec:
+            return (sid if sid == eid else f"{sid} vs {eid}",
+                    sc, ec, sc * nbytes, ec * nbytes)
+    if len(sim_trace) != len(exe_trace):
+        longer = sim_trace if len(sim_trace) > len(exe_trace) \
+            else exe_trace
+        extra = longer[min(len(sim_trace), len(exe_trace))]
+        return (extra[0], len(sim_trace), len(exe_trace), -1, -1)
+    return None
 
 
 def activation_caps(graph: PipelineGraph,
@@ -134,10 +184,24 @@ def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
         "loss": float(measured["loss"]),
     }
     if list(sim_peaks) != list(exe_peaks):
+        div = diff_activation_traces(
+            simulated_activation_trace(graph, sim),
+            measured["activation_trace"],
+            int(measured.get("activation_nbytes", 0)))
+        if div is None:
+            detail = ("the item timelines agree item-for-item — the "
+                      "summary claim itself is inconsistent with the "
+                      "timeline it shipped with")
+        else:
+            iid, sc, ec, sb, eb = div
+            detail = (f"first diverging item {iid}: simulated "
+                      f"{sc} live activations ({sb} bytes) vs "
+                      f"replayed {ec} ({eb} bytes)")
         raise MemoryModelMismatch(
             f"simulator peak activations {sim_peaks} != executor "
             f"measurement {exe_peaks} for schedule "
-            f"{sim['schedule']!r} ({report})")
+            f"{sim['schedule']!r}; {detail} ({report})",
+            first_divergence=div)
     over = [d for d in range(sim["num_devices"])
             if exe_peaks[d] > caps[d]]
     if over:

@@ -51,6 +51,14 @@ Item = Tuple[float, float, int, str, int, int]
 _KIND_RANK = {"B": 0, "F": 1, "W": 2}
 
 
+def item_id(item: Item) -> str:
+    """Stable human-readable id for one timeline item — the anchor
+    shared by schedlint findings (``repro.analysis.schedlint``) and the
+    memory-validation timeline diff (``core.schedule.memory``)."""
+    _start, _end, dev, kind, stage, mb = item
+    return f"{kind}(s{stage},m{mb})@d{dev}"
+
+
 def sort_items(items: List[Item]) -> List[Item]:
     """Dependency-respecting total order: by start time; at equal start
     (only possible through zero-duration frozen B passes) B before F

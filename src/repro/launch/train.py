@@ -92,6 +92,19 @@ def resolve_plan(mllm, args):
     # instantiating the plan validates it against THIS mllm (stage
     # counts vs layer counts, encoder set) before any step runs
     executor = plan.apply(mllm, text_len=args.seq)
+    if getattr(args, "lint", True):
+        # the schedlint gate: a plan whose timeline would race,
+        # overflow the activation caps, or deadlock a ring lowering
+        # must die here, not N steps into a run (--no-lint to bypass)
+        from repro.analysis import (format_findings, gate,
+                                    lint_executor_contract, lint_plan)
+        found = lint_plan(plan) + lint_executor_contract(executor)
+        if gate(found):
+            raise SystemExit(format_findings(
+                found, header="plan failed the schedule lint "
+                              "(--no-lint to bypass):"))
+        if found:
+            print(format_findings(found, header="plan lint notes:"))
     if args.plan_out:
         plan.save(args.plan_out)
         print(f"saved plan to {args.plan_out}")
@@ -172,6 +185,8 @@ def main(argv=None):
     ap.add_argument("--cp-size", type=int, default=1,
                     help="context-parallel ranks for the plan search")
     ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--no-lint", dest="lint", action="store_false",
+                    help="skip the schedlint gate on the resolved plan")
     ap.add_argument("--train-llm", action="store_true",
                     help="MLLM mode: unfreeze the LLM (ft1 fine-tune)")
     args = ap.parse_args(argv)

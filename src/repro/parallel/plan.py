@@ -205,10 +205,11 @@ def build_executor_plan(encoders: Sequence[pp.ModuleProfile],
     win with a v-times finer simulation graph; its bubble accounting
     is kept under ``"schedule"`` while the executor graph folds back
     to the planned one-stage-per-device partition."""
-    graph, sim = pp.simulate_plan(
+    sim_graph, sim = pp.simulate_plan(
         encoders, llm, enc_counts, llm_stages, num_microbatches,
         schedule=schedule, frozen_aware=frozen_aware,
         virtual_chunks=virtual_chunks)
+    graph = sim_graph
     if len(graph.stages) != sim["num_devices"]:
         llm_k = min(llm_stages, len(llm.layer_fwd))
         counts = [min(k, len(e.layer_fwd))
@@ -217,6 +218,10 @@ def build_executor_plan(encoders: Sequence[pp.ModuleProfile],
             encoders, llm, counts, llm_k, frozen_aware=frozen_aware)
     return {
         "graph": graph,
+        # the (possibly chunk-refined) graph the simulation items'
+        # stage indices refer to — what schedlint.lint_executor_contract
+        # lints the timeline against
+        "sim_graph": sim_graph,
         "encoder_profiles": list(encoders),
         "llm_profile": llm,
         "schedule": sim,

@@ -1,0 +1,36 @@
+"""Hypothesis property: every winner ``auto_parallelize`` can emit —
+any profile shape, any device/microbatch budget — ships a timeline
+that passes every schedlint rule. Skipped when the hypothesis wheel is
+absent (the deterministic slice in test_analysis.py still runs)."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.analysis import schedlint  # noqa: E402
+from repro.core import pipeline as pp  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(enc_layers=st.integers(1, 4),
+       llm_layers=st.integers(2, 8),
+       devices=st.integers(2, 5),
+       mbs=st.integers(2, 8),
+       frozen=st.booleans(),
+       enc_cost=st.floats(0.25, 4.0),
+       objective=st.sampled_from(sorted(pp.AUTO_OBJECTIVES)))
+def test_auto_parallelize_winners_lint_clean(enc_layers, llm_layers,
+                                             devices, mbs, frozen,
+                                             enc_cost, objective):
+    encs = [pp.ModuleProfile("enc", np.full(enc_layers, enc_cost),
+                             frozen=frozen)]
+    llm = pp.ModuleProfile("llm", np.full(llm_layers, 2.0),
+                           frozen=False)
+    try:
+        best = pp.auto_parallelize(encs, llm, devices, mbs,
+                                   objective=objective)
+    except ValueError:
+        assume(False)
+        return
+    assert schedlint.lint_timeline(best["graph"], best) == []

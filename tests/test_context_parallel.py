@@ -298,36 +298,14 @@ def test_cp_grads_padding_exact_zero(method, impl):
                                    atol=2e-4, rtol=2e-4)
 
 
-def _walk_avals(jaxpr, seen):
-    """Collect every (primitive, shape, dtype) in a jaxpr, recursing
-    into sub-jaxprs (shard_map/scan/pjit/custom_vjp/pallas params)."""
-    for eqn in jaxpr.eqns:
-        for var in eqn.outvars:
-            aval = getattr(var, "aval", None)
-            if aval is not None and hasattr(aval, "shape"):
-                seen.append((eqn.primitive.name, tuple(aval.shape),
-                             getattr(aval, "dtype", None)))
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (list, tuple)) else (val,)
-            for item in vals:
-                if hasattr(item, "eqns"):                 # raw Jaxpr
-                    _walk_avals(item, seen)
-                elif hasattr(getattr(item, "jaxpr", None), "eqns"):
-                    _walk_avals(item.jaxpr, seen)         # ClosedJaxpr
-
-
-def _quadratic_f32(jaxpr, T):
-    seen = []
-    _walk_avals(jaxpr.jaxpr, seen)
-    return [s for s in seen if s[2] == jnp.float32
-            and sum(1 for d in s[1] if d >= T) >= 2]
-
-
 @pytest.mark.parametrize("method", ["allgather", "ring"])
 def test_cp_backward_no_quadratic_intermediate(method):
     """The traced CP backward on the kernel path must not allocate any
     O(Tq·Tk) f32 array — residuals are (out, lse) rows and the fused
-    chunk backwards only ever hold [block_q, block_k] tiles."""
+    chunk backwards only ever hold [block_q, block_k] tiles. (The
+    jaxpr walk lives in repro.analysis.jaxprlint, promoted from this
+    file.)"""
+    from repro.analysis.jaxprlint import quadratic_f32 as _quadratic_f32
     T = 64
     q, k, v, bits, pos, *_ = make_case(B=1, H=2)
     mesh = jax.make_mesh((1,), ("cp",))

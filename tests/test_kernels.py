@@ -215,27 +215,11 @@ def test_fused_backward_padding_zero_grads():
                                    atol=1e-4, rtol=1e-4)
 
 
-def _walk_avals(jaxpr, seen):
-    for eqn in jaxpr.eqns:
-        for var in eqn.outvars:
-            aval = getattr(var, "aval", None)
-            if aval is not None and hasattr(aval, "shape"):
-                seen.append((eqn.primitive.name, tuple(aval.shape),
-                             getattr(aval, "dtype", None)))
-        for val in eqn.params.values():
-            sub = getattr(val, "jaxpr", None)
-            if sub is not None:
-                _walk_avals(sub, seen)
-            elif isinstance(val, (list, tuple)):
-                for item in val:
-                    sub = getattr(item, "jaxpr", None)
-                    if sub is not None:
-                        _walk_avals(sub, seen)
-
-
 def test_fused_backward_no_quadratic_intermediate():
     """The traced backward must not allocate any O(Tq·Tk) f32 array —
-    only [block_q, block_k] tiles inside the kernels."""
+    only [block_q, block_k] tiles inside the kernels. (The jaxpr walk
+    lives in repro.analysis.jaxprlint, promoted from this file.)"""
+    from repro.analysis.jaxprlint import quadratic_f32
     T = 64
     q, k, v, bits, pos, *_ = _mode_inputs("ee", seed=0, T=T)
 
@@ -245,22 +229,14 @@ def test_fused_backward_no_quadratic_intermediate():
                                      block_k=16) ** 2)
 
     jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
-    seen = []
-    _walk_avals(jaxpr.jaxpr, seen)
-    quadratic = [s for s in seen
-                 if s[2] == jnp.float32
-                 and sum(1 for d in s[1] if d >= T) >= 2]
-    assert not quadratic, quadratic
+    assert not quadratic_f32(jaxpr, T), quadratic_f32(jaxpr, T)
     # sanity: the XLA fallback DOES trace a [T,T] intermediate, so the
     # assertion above is actually discriminating
     def loss_xla(q, k, v):
         return jnp.sum(bam_attention(q, k, v, bits, bits, pos, pos,
                                      impl="xla") ** 2)
     jaxpr_x = jax.make_jaxpr(jax.grad(loss_xla, argnums=(0, 1, 2)))(q, k, v)
-    seen_x = []
-    _walk_avals(jaxpr_x.jaxpr, seen_x)
-    assert any(s[2] == jnp.float32 and sum(1 for d in s[1] if d >= T) >= 2
-               for s in seen_x)
+    assert quadratic_f32(jaxpr_x, T)
 
 
 # ---------------------------------------------------------------------------
