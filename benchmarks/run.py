@@ -10,6 +10,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   roofline  — §Roofline terms from the dry-run artifacts
   schedmem  — simulator-vs-executor peak-activation validation for
               every pipeline schedule (fails loudly on divergence)
+  spmd      — distributed shard_map executor vs sequential replay
+              (multi-device subprocess; fails loudly on grad or
+              peak divergence)
 
 ``--smoke`` shrinks every benchmark to a tiny grid with one repeat —
 seconds, not minutes — so CI can execute all of them on every push and
@@ -49,6 +52,9 @@ def main() -> None:
     if on("schedmem"):
         from benchmarks import bench_schedule_memory
         bench_schedule_memory.run(smoke=smoke)
+    if on("spmd"):
+        from benchmarks import bench_spmd_executor
+        bench_spmd_executor.run(smoke=smoke)
 
 
 if __name__ == '__main__':

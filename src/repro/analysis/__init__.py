@@ -22,7 +22,8 @@ from .jaxprlint import (check_dtype_drift, check_no_quadratic_intermediate,
 from .kernellint import (check_block_divisibility, check_block_map_coverage,
                          check_scalar_prefetch_static, lint_file,
                          lint_kernels, lint_source)
-from .schedlint import lint_executor_contract, lint_plan, lint_timeline
+from .schedlint import (lint_executor_contract, lint_plan,
+                        lint_spmd_program, lint_timeline)
 
 __all__ = [
     "Finding", "RuleSpec", "RULES", "Severity", "filter_findings",
@@ -33,5 +34,6 @@ __all__ = [
     "check_block_divisibility", "check_block_map_coverage",
     "check_scalar_prefetch_static", "lint_file", "lint_kernels",
     "lint_source",
-    "lint_executor_contract", "lint_plan", "lint_timeline",
+    "lint_executor_contract", "lint_plan", "lint_spmd_program",
+    "lint_timeline",
 ]

@@ -28,7 +28,19 @@ lint finding instead of a silent deadlock or race under the upcoming
                        program orders + cross-device handoffs must be
                        acyclic — a cycle IS a deadlock, found by
                        topological sort rather than by hanging an
-                       8-rank job
+                       8-rank job. ``lint_spmd_program`` extends the
+                       rule from the timeline *model* to the *actual
+                       emitted* ppermute program of the shard_map
+                       executor (``repro.parallel.spmd``): a compute
+                       item whose cross-device input is never delivered
+                       by an earlier wave boundary is exactly a
+                       blocking recv that never unblocks
+* ``ppermute-program`` the emitted comm rounds are well-formed: each
+                       round is a partial permutation (distinct
+                       sources, distinct destinations, no self-sends)
+                       and every round ships the buffer its sending
+                       device produced in that very wave (no stale
+                       sends)
 
 plus plan-level consistency checks over serialized
 :class:`~repro.parallel.plan.MLLMParallelPlan` JSONs (``lint_plan``).
@@ -69,6 +81,9 @@ register_rule("peak-claim", "schedlint",
 register_rule("send-recv-cycle", "schedlint",
               "the send/recv lowering of the timeline is acyclic "
               "(no ring/ppermute deadlock)")
+register_rule("ppermute-program", "schedlint",
+              "emitted ppermute rounds are valid partial permutations "
+              "shipping the freshly produced buffer")
 register_rule("plan-consistency", "schedlint",
               "a serialized plan's schedule/stage/context components "
               "agree with each other")
@@ -339,6 +354,100 @@ def _find_cycle(adj: List[List[int]], nodes: List[int]) -> List[int]:
 
 
 # ---------------------------------------------------------------------------
+# Emitted SPMD program lint (repro.parallel.spmd wave/ppermute programs)
+# ---------------------------------------------------------------------------
+
+def lint_spmd_program(program: Any, *,
+                      location: str = "spmd-program") -> List[Finding]:
+    """Validate the *actual emitted* shard_map program — the
+    wave/ppermute lowering ``repro.parallel.spmd.compile_spmd_program``
+    produced — not the timeline model it came from.
+
+    Three families of checks:
+
+    * each comm round is a legal ``lax.ppermute`` partial permutation:
+      distinct sources, distinct destinations, no self-sends
+      (``ppermute-program``);
+    * each round ships a FRESH buffer: the executor holds one forward
+      send buffer and one cotangent send buffer per device, overwritten
+      by every wave, so a round attached to wave w must ship exactly
+      what its source device computed in wave w — anything else sends
+      stale garbage (``ppermute-program``);
+    * delivery-before-use: a compute item consuming a cross-device
+      input (consumer F needing a remote predecessor's activation,
+      producer B needing a remote successor's cotangent) must have that
+      value delivered by a round at a STRICTLY earlier wave boundary.
+      In the blocking-recv lowering this is the deadlock condition — a
+      recv with no matching earlier send never unblocks
+      (``send-recv-cycle``).
+    """
+    out: List[Finding] = []
+    graph = program.graph
+    device_of = program.device_of
+    preds, succs = graph.preds, graph.succs
+    delivered: set = set()              # (kind, dst_stage, src_stage, m)
+
+    def produced(kind: str) -> str:
+        return "F" if kind == "fwd" else "B"
+
+    for w, wave in enumerate(program.waves):
+        # -- consumers first: wave-w rounds run AFTER wave-w compute --
+        for dev, (i, kind, s, _c, m) in sorted(wave.compute.items()):
+            it = program.items[i]
+            if kind == "F":
+                needed = [("fwd", s, p, m) for p in preds[s]
+                          if device_of[p] != dev]
+            elif kind == "B":
+                needed = [("bwd", s, q, m) for q in succs[s]
+                          if device_of[q] != dev
+                          and graph.stages[q].bwd_b > 0]
+            else:
+                needed = []
+            for key in needed:
+                if key not in delivered:
+                    knd, dst_s, src_s, mb = key
+                    what = "activation" if knd == "fwd" else "cotangent"
+                    out.append(finding(
+                        "send-recv-cycle",
+                        f"{location}:wave{w}:{item_id(it)}",
+                        f"blocking recv never satisfied: consumes the "
+                        f"{what} of stage {src_s} (microbatch {mb}) "
+                        f"from device {device_of[src_s]}, but no "
+                        f"earlier wave boundary delivers it to device "
+                        f"{dev}"))
+        for r, rnd in enumerate(wave.rounds):
+            at = f"{location}:wave{w}:round{r}"
+            srcs = [t.src_dev for t in rnd.transfers]
+            dsts = [t.dst_dev for t in rnd.transfers]
+            if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+                out.append(finding(
+                    "ppermute-program", at,
+                    f"round is not a partial permutation: sources "
+                    f"{srcs}, destinations {dsts} (duplicates)"))
+            for t in rnd.transfers:
+                if t.src_dev == t.dst_dev:
+                    out.append(finding(
+                        "ppermute-program", at,
+                        f"self-send on device {t.src_dev} (stage "
+                        f"{t.src_stage} -> {t.dst_stage}); local "
+                        f"handoffs go through the store, not ppermute"))
+                want = (produced(rnd.kind), t.src_stage, t.microbatch)
+                have = wave.compute.get(t.src_dev)
+                if have is None or have[1:3] + (have[4],) != want:
+                    have_id = item_id(program.items[have[0]]) \
+                        if have is not None else "nothing"
+                    out.append(finding(
+                        "ppermute-program", at,
+                        f"stale send buffer: round ships "
+                        f"{want[0]}(s{want[1]},m{want[2]})'s output "
+                        f"from device {t.src_dev}, whose wave-{w} "
+                        f"compute is {have_id}"))
+                delivered.add((rnd.kind, t.dst_stage, t.src_stage,
+                               t.microbatch))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Plan-level lint (serialized MLLMParallelPlan JSONs)
 # ---------------------------------------------------------------------------
 
@@ -405,4 +514,11 @@ def lint_executor_contract(executor: Dict[str, Any], *,
             f"executor contract carries no graph matching its "
             f"timeline (stage index {mx} vs {len(graph.stages)} "
             f"stages)")]
-    return lint_timeline(graph, sim, location=location)
+    out = lint_timeline(graph, sim, location=location)
+    program = executor.get("spmd_program")
+    if program is not None:
+        # an SPMD-mode contract ships the compiled wave/ppermute
+        # program — lint what will actually run, not just the model
+        out += lint_spmd_program(program,
+                                 location=f"{location}:spmd")
+    return out

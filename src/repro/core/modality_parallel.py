@@ -210,10 +210,14 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     Contracts (same as ``pipeline_forward``): ``stage_fn(lp, x) -> y``
     with x/y of identical shape (the residual-stream contract);
     ``stage_params`` stage-stacked with leading dim S; ``microbatches``
-    [M, ...]; ``graph`` a CHAIN (one pred/succ per stage). ``sim`` is
-    any ``core.schedule`` simulation dict (``items`` + ``device_of``),
-    so folded placements — interleaved round-robin, ZB-V — execute on
-    their simulated device map. When ``devices`` (one JAX device per
+    [M, ...]; ``graph`` any stage DAG in topological order — source
+    stages read the microbatch, fan-in stages consume the SUM of their
+    predecessors' outputs (the modality-parallel merge: every encoder
+    chain feeds the first LLM stage), fan-out stages accumulate the
+    cotangents their successors send back, and the loss sums over sink
+    stages. ``sim`` is any ``core.schedule`` simulation dict (``items``
+    + ``device_of``), so folded placements — interleaved round-robin,
+    ZB-V — execute on their simulated device map. When ``devices`` (one JAX device per
     pipeline rank) is given, each rank's params and activations are
     placed on its device; otherwise placement is logical.
 
@@ -233,11 +237,10 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     zero for stages the schedule assigns no W/B-glued weight work),
     peak_activations_per_device, peak_w_residuals_per_device.
     """
-    from repro.core.schedule.simulator import is_chain, item_id
+    from repro.core.schedule.simulator import item_id
 
-    assert is_chain(graph), \
-        "execute_schedule replays chain pipelines (one pred per stage)"
     S = len(graph.stages)
+    preds, succs = graph.preds, graph.succs
     M = int(microbatches.shape[0])
     items = sim["items"]
     device_of = sim["device_of"]
@@ -257,7 +260,15 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     w_store: Dict[tuple, Any] = {}      # (s, m) -> (x, output cotangent)
     transit: Dict[tuple, Any] = {}      # produced, not yet admitted
     cot: Dict[tuple, Any] = {}          # (s, m) -> output cotangent
-    outputs = [None] * M
+    outputs: List[Any] = [None] * M
+
+    def accumulate(d: Dict[tuple, Any], key: tuple, val: Any) -> None:
+        # fan-in merge: a consumer stage with several predecessors (or
+        # a fan-out stage with several successors in the backward)
+        # sums what arrives, in timeline order
+        d[key] = val if key not in d else jax.tree.map(
+            jnp.add, d[key], val)
+
     peak = [0] * D
     w_peak = [0] * D
     loss = 0.0
@@ -277,19 +288,21 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
         start, _end, dev, kind, s, m = item
         st = graph.stages[s]
         if kind == "F":
-            x = transit.pop((s, m)) if s > 0 else microbatches[m]
+            x = transit.pop((s, m)) if preds[s] else microbatches[m]
             if devices is not None:
                 x = jax.device_put(x, devices[dev])
             store[(s, m)] = x
             act_nbytes = max(act_nbytes, int(getattr(x, "nbytes", 0)))
             peak[dev] = max(peak[dev], store_count(dev))
             y = stage_fn(params[s], x)
-            if s == S - 1:
-                outputs[m] = y
+            if not succs[s]:                     # sink: loss + cotangent
+                outputs[m] = y if outputs[m] is None \
+                    else outputs[m] + y
                 loss = loss + loss_fn(y)
-                cot[(s, m)] = jax.grad(loss_fn)(y)
+                accumulate(cot, (s, m), jax.grad(loss_fn)(y))
             else:
-                transit[(s + 1, m)] = y
+                for q in succs[s]:
+                    accumulate(transit, (q, m), y)
         elif kind == "B":
             x = store.pop((s, m))
             # frozen stages with nothing trainable upstream (bwd_b = 0)
@@ -297,9 +310,11 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
             g = cot.pop((s, m), None)
             assert g is not None or (st.bwd_b == 0 and st.bwd_w == 0), \
                 f"missing cotangent for B({s}, {m})"
-            if st.bwd_b > 0 and s > 0:
+            if st.bwd_b > 0 and preds[s]:
                 _, vjp_x = jax.vjp(lambda xx: stage_fn(params[s], xx), x)
-                (cot[(s - 1, m)],) = vjp_x(g)
+                (dx,) = vjp_x(g)
+                for p in preds[s]:
+                    accumulate(cot, (p, m), dx)
             if st.bwd_w > 0:
                 if has_w_items:              # deferred: park for W
                     w_store[(s, m)] = (x, g)

@@ -133,7 +133,10 @@ def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
                              seq: int = 4, seed: int = 0,
                              stage_fn=None, stage_params=None,
                              microbatches=None,
-                             sim: Optional[Dict[str, object]] = None
+                             sim: Optional[Dict[str, object]] = None,
+                             executor: str = "replay",
+                             mesh=None,
+                             claim_sim: Optional[Dict[str, object]] = None
                              ) -> Dict[str, object]:
     """Simulate ``schedule`` on ``graph``, replay the timeline on the
     real executor, and cross-check the activation-memory claims.
@@ -142,9 +145,17 @@ def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
     one weight matrix per stage) is built — enough to exercise real
     forwards, real input-grad and weight-grad VJPs, and real activation
     buffers. A precomputed ``sim`` dict skips the scheduler call (used
-    to prove the harness actually fails on a divergent claim). Raises
-    :class:`MemoryModelMismatch` on any divergence; returns the
-    comparison report otherwise."""
+    to prove the harness actually fails on a divergent claim).
+
+    ``executor`` picks the measurement side: ``"replay"`` (sequential
+    ``execute_schedule``) or ``"spmd"`` (the shard_map executor,
+    ``repro.parallel.spmd`` — the distributed path; ``mesh`` rides
+    through to it). ``claim_sim`` lets the *claimed* timeline differ
+    from the one executed (the distributed reality check: a plan's
+    claim vs the program a rank actually runs) — peaks and the
+    per-item trace diff then compare the measurement against the
+    claim. Raises :class:`MemoryModelMismatch` on any divergence;
+    returns the comparison report otherwise."""
     import jax
     import jax.numpy as jnp
     from repro.core.modality_parallel import execute_schedule
@@ -168,15 +179,26 @@ def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
             jax.random.fold_in(key, 1),
             (num_microbatches, batch, seq, d_model))
 
-    measured = execute_schedule(stage_fn, stage_params, microbatches,
-                                graph, sim)
-    sim_peaks = sim["peak_activations_per_device"]
+    if executor == "spmd":
+        from repro.parallel.spmd import run_schedule_spmd
+        measured = run_schedule_spmd(stage_fn, stage_params,
+                                     microbatches, graph, sim,
+                                     mesh=mesh)
+    elif executor == "replay":
+        measured = execute_schedule(stage_fn, stage_params,
+                                    microbatches, graph, sim)
+    else:
+        raise ValueError(f"unknown executor {executor!r}; pick "
+                         f"'replay' or 'spmd'")
+    claimed = sim if claim_sim is None else claim_sim
+    sim_peaks = claimed["peak_activations_per_device"]
     exe_peaks = measured["peak_activations_per_device"]
     caps = activation_caps(graph, sim["device_of"], num_microbatches)
     report = {
         "schedule": sim["schedule"],
         "virtual_chunks": sim["virtual_chunks"],
         "num_devices": sim["num_devices"],
+        "executor": executor,
         "simulated_peaks": list(sim_peaks),
         "executor_peaks": list(exe_peaks),
         "caps": caps,
@@ -185,7 +207,7 @@ def validate_schedule_memory(graph: PipelineGraph, num_microbatches: int,
     }
     if list(sim_peaks) != list(exe_peaks):
         div = diff_activation_traces(
-            simulated_activation_trace(graph, sim),
+            simulated_activation_trace(graph, claimed),
             measured["activation_trace"],
             int(measured.get("activation_nbytes", 0)))
         if div is None:

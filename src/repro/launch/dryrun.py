@@ -1,7 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
-# Only the dry-run sees 512 placeholder devices (DESIGN.md §5).
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first
+# init. Only the dry-run sees 512 placeholder devices (DESIGN.md §5).
+# APPEND to any user-set XLA_FLAGS rather than clobbering them, and
+# respect an explicit device-count choice (e.g. a multi-device test
+# harness driving the dry-run under its own mesh size).
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape)
 on the production meshes and extract memory / cost / collective stats.

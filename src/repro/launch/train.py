@@ -90,8 +90,11 @@ def resolve_plan(mllm, args):
                           microbatch_size=args.batch,
                           block_size=block))
     # instantiating the plan validates it against THIS mllm (stage
-    # counts vs layer counts, encoder set) before any step runs
-    executor = plan.apply(mllm, text_len=args.seq)
+    # counts vs layer counts, encoder set) before any step runs; in
+    # --spmd mode the contract also carries the compiled wave/ppermute
+    # program, which the lint gate below then statically validates
+    mode = "spmd" if getattr(args, "spmd", False) else "replay"
+    executor = plan.apply(mllm, text_len=args.seq, mode=mode)
     if getattr(args, "lint", True):
         # the schedlint gate: a plan whose timeline would race,
         # overflow the activation caps, or deadlock a ring lowering
@@ -124,6 +127,28 @@ def train_mllm(args) -> dict:
     print(f"executor graph: {len(executor['graph'].stages)} stages, "
           f"simulated bubble "
           f"{executor['schedule']['bubble_fraction']:.3f}")
+    if getattr(args, "spmd", False):
+        # prove the compiled shard_map program on THIS host's devices
+        # before any training step: distributed loss/grads must match
+        # the sequential replay (toy stages — the cheap parity oracle)
+        from repro.parallel.spmd import spmd_parity_report
+        D = int(executor["schedule"]["num_devices"])
+        if len(jax.devices()) < D:
+            raise SystemExit(
+                f"--spmd needs {D} devices for this plan but the "
+                f"process has {len(jax.devices())}; relaunch with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={D}")
+        rep = spmd_parity_report(executor)
+        print(f"spmd executor: {rep['program']} "
+              f"loss {rep['loss_spmd']:.6f} vs replay "
+              f"{rep['loss_replay']:.6f}, max grad diff "
+              f"{rep['max_grad_diff']:.2e}, peaks_match="
+              f"{rep['peaks_match']}")
+        if not (rep["peaks_match"] and rep["trace_match"]
+                and rep["max_grad_diff"] < 1e-4):
+            raise SystemExit(
+                "spmd executor diverged from the sequential replay on "
+                f"this plan: {rep}")
     params = mllm.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
@@ -187,6 +212,11 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--no-lint", dest="lint", action="store_false",
                     help="skip the schedlint gate on the resolved plan")
+    ap.add_argument("--spmd", action="store_true",
+                    help="MLLM mode: compile the plan's timeline to "
+                    "the shard_map executor, lint the emitted ppermute "
+                    "program, and verify distributed loss/grads "
+                    "against the sequential replay before training")
     ap.add_argument("--train-llm", action="store_true",
                     help="MLLM mode: unfreeze the LLM (ft1 fine-tune)")
     args = ap.parse_args(argv)

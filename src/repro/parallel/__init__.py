@@ -16,3 +16,7 @@ from .plan import (ClusterSpec, ContextPlan,  # noqa: F401
                    StagePlan, WorkloadShape, build_executor_plan)
 from .api import (OBJECTIVES, mllm_workload_bits,  # noqa: F401
                   parallelize, plan_context, search_plan)
+from .spmd import (SPMDProgram, build_spmd_runner,  # noqa: F401
+                   compile_spmd_program, mesh_from_plan,
+                   reference_dag_loss, run_schedule_spmd,
+                   spmd_parity_report, toy_stage_model)

@@ -328,13 +328,24 @@ class MLLMParallelPlan:
         return self.stage.counts_by_name()
 
     # -- executor contract -------------------------------------------------
-    def apply(self, mllm, text_len: Optional[int] = None
-              ) -> Dict[str, Any]:
+    def apply(self, mllm, text_len: Optional[int] = None, *,
+              mode: str = "replay") -> Dict[str, Any]:
         """Instantiate the plan against ``mllm``: re-derive the module
         profiles, partition at the planned stage counts, re-simulate
         the PINNED (schedule, virtual_chunks) pair, and return the
         executor contract (see :func:`build_executor_plan`). Replaces
-        ``MultimodalParallelSpec.apply``."""
+        ``MultimodalParallelSpec.apply``.
+
+        ``mode="spmd"`` additionally compiles the simulated timeline
+        into the shard_map executor's wave/ppermute program
+        (:func:`repro.parallel.spmd.compile_spmd_program`) and ships it
+        under ``"spmd_program"`` — the artifact
+        ``run_schedule_spmd`` executes and ``schedlint.
+        lint_spmd_program`` statically validates."""
+        if mode not in ("replay", "spmd"):
+            raise ValueError(
+                f"unknown executor mode {mode!r}; pick 'replay' "
+                f"(sequential timeline replay) or 'spmd' (shard_map)")
         names = tuple(sorted(mllm.encoders))
         assert names == tuple(sorted(self.stage.encoder_names)), \
             (f"plan was searched for encoders "
@@ -351,6 +362,10 @@ class MLLMParallelPlan:
             frozen_aware=self.stage.frozen_aware)
         out["plan"] = self
         out["context"] = self.context
+        if mode == "spmd":
+            from repro.parallel.spmd import compile_spmd_program
+            out["spmd_program"] = compile_spmd_program(
+                out["sim_graph"], out["schedule"])
         return out
 
     # -- human-readable dump -----------------------------------------------

@@ -18,6 +18,13 @@ layout (``layout = plan.context.apply(seq_len)``), attention runs
 through the differentiable CP bodies under ``mesh``, and loss + grads
 come out identical to the unpermuted step (cross-entropy is
 permutation-invariant, CP attention is exact).
+
+``make_spmd_train_step(stage_fn, graph, sim)`` -> pipeline-parallel
+training under the shard_map schedule executor
+(``repro.parallel.spmd``): each step runs the plan's F/B/W timeline
+distributed over the mesh's pipeline axis and feeds the stage-stacked
+grads to the optimizer. The mesh may carry a ``cp`` axis alongside, so
+one plan JSON drives PP x CP on a single device mesh.
 """
 from __future__ import annotations
 
@@ -195,6 +202,43 @@ def make_cp_train_step(cfg: ModelConfig, layout, mesh,
         params, opt_state, om = opt.update(ocfg, grads, opt_state, params,
                                            frozen_mask)
         return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# SPMD pipeline train step (schedule executor under shard_map)
+# ---------------------------------------------------------------------------
+
+def make_spmd_train_step(stage_fn, graph, sim,
+                         ocfg: Optional[opt.AdamWConfig] = None, *,
+                         mesh=None, axis_name: str = "pp",
+                         microbatch_loss=None, frozen_mask=None):
+    """Pipeline-parallel train step driven by a simulated schedule
+    timeline, executed distributed (``repro.parallel.spmd``).
+
+    ``stage_fn(lp, x) -> y`` / stage-stacked ``stage_params`` follow
+    the ``execute_schedule`` contract; ``graph``/``sim`` come from the
+    plan (``executor["sim_graph"]`` / ``executor["schedule"]`` of
+    ``plan.apply(mllm, mode="spmd")``). The schedule program is
+    compiled once; every ``step(stage_params, opt_state,
+    microbatches)`` replays it under ``shard_map`` (the jitted core is
+    cached across steps) and applies AdamW to the stage-stacked grads.
+    Frozen stages contribute exactly-zero grads by construction (the
+    schedule gives them no weight-grad items), so ``frozen_mask`` is
+    only needed to keep optimizer state out of frozen slots."""
+    from repro.parallel.spmd import build_spmd_runner
+    ocfg = ocfg or opt.AdamWConfig()
+    runner = build_spmd_runner(stage_fn, graph, sim, mesh=mesh,
+                               axis_name=axis_name,
+                               microbatch_loss=microbatch_loss)
+
+    def step(stage_params, opt_state, microbatches):
+        res = runner(stage_params, microbatches)
+        params, opt_state, om = opt.update(
+            ocfg, res["param_grads"], opt_state, stage_params,
+            frozen_mask)
+        return params, opt_state, {"loss": res["loss"], **om}
 
     return step
 

@@ -511,3 +511,99 @@ def test_resolve_plan_lint_gate(tmp_path):
     args.lint = False
     got, _executor = resolve_plan(mllm, args)
     assert got.schedule.bubble_fraction == 1.5
+
+
+# ---------------------------------------------------------------------------
+# lint_spmd_program: the emitted wave/ppermute program (not the model)
+# ---------------------------------------------------------------------------
+
+def spmd_program(schedule="zb-h1"):
+    import copy
+
+    from repro.parallel.spmd import compile_spmd_program
+    chunked = schedule in ("interleaved", "zb-v")
+    g = sch.refine_chain(two_stage(), 2) if chunked else two_stage()
+    kwargs = {"virtual_chunks": 2} if chunked else {}
+    sim = sch.get_scheduler(schedule, **kwargs).simulate(g, M)
+    return copy.deepcopy(compile_spmd_program(g, sim))
+
+
+@pytest.mark.parametrize("schedule", sch.SCHEDULES)
+def test_compiled_spmd_programs_lint_clean(schedule):
+    """What compile_spmd_program emits for every scheduler passes its
+    own static contract: legal ppermute rounds, fresh send buffers,
+    every cross-device input delivered before use."""
+    assert schedlint.lint_spmd_program(spmd_program(schedule)) == []
+
+
+def _first_round(prog, kind="fwd"):
+    for w, wave in enumerate(prog.waves):
+        for rnd in wave.rounds:
+            if rnd.kind == kind:
+                return w, rnd
+    raise AssertionError(f"no {kind} round emitted")
+
+
+def test_seeded_late_round_trips_send_recv_cycle():
+    """Delaying a delivery past its consumer's wave is the blocking
+    recv that never unblocks — and the moved round now ships a stale
+    buffer too."""
+    prog = spmd_program()
+    w, rnd = _first_round(prog)
+    prog.waves[w].rounds.remove(rnd)
+    prog.waves[w + 1].rounds.append(rnd)
+    found = schedlint.lint_spmd_program(prog)
+    assert "send-recv-cycle" in rules_of(found)
+    msg = next(f for f in found
+               if f.rule == "send-recv-cycle").message
+    assert "never satisfied" in msg and "device" in msg
+
+
+def test_seeded_early_round_trips_stale_send():
+    """Hoisting a round to an earlier wave makes it ship whatever the
+    source device computed THEN — a stale send buffer."""
+    prog = spmd_program()
+    w, rnd = _first_round(prog, kind="bwd")
+    assert w > 0
+    prog.waves[w].rounds.remove(rnd)
+    prog.waves[w - 1].rounds.append(rnd)
+    found = schedlint.lint_spmd_program(prog)
+    assert "ppermute-program" in rules_of(found)
+    assert any("stale send" in f.message for f in found)
+
+
+def test_seeded_duplicate_destination_trips_ppermute_program():
+    import dataclasses as dc
+    prog = spmd_program()
+    w, rnd = _first_round(prog)
+    t = rnd.transfers[0]
+    rnd.transfers.append(dc.replace(t, src_dev=t.src_dev + 1))
+    found = schedlint.lint_spmd_program(prog)
+    assert "ppermute-program" in rules_of(found)
+    assert any("not a partial permutation" in f.message for f in found)
+
+
+def test_seeded_self_send_trips_ppermute_program():
+    prog = spmd_program()
+    _w, rnd = _first_round(prog)
+    rnd.transfers[0].dst_dev = rnd.transfers[0].src_dev
+    found = schedlint.lint_spmd_program(prog)
+    assert "ppermute-program" in rules_of(found)
+    assert any("self-send" in f.message for f in found)
+
+
+def test_executor_contract_carries_spmd_program_lint():
+    """An SPMD-mode executor contract ships its compiled program, and
+    lint_executor_contract statically validates the ACTUAL emitted
+    rounds under the contract's location."""
+    g, sim = sim_of("zb-h1")
+    prog = spmd_program()
+    executor = {"sim_graph": g, "schedule": sim, "spmd_program": prog}
+    assert schedlint.lint_executor_contract(executor) == []
+    w, rnd = _first_round(prog)
+    prog.waves[w].rounds.remove(rnd)
+    prog.waves[w + 1].rounds.append(rnd)
+    found = schedlint.lint_executor_contract(executor)
+    assert "send-recv-cycle" in rules_of(found)
+    assert all(f.location.startswith("executor:spmd")
+               for f in found)

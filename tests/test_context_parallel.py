@@ -12,7 +12,7 @@ from repro.core import bam, context_parallel as cp
 from repro.core import distribution as dist
 from repro.models.layers import sdpa
 
-from .helpers import run_with_devices
+from .helpers import host_mesh, subprocess_test
 
 
 def make_case(seed=0, B=2, T=64, H=4, hd=16):
@@ -135,74 +135,48 @@ def test_simulate_rank_workloads_matches_loop():
 
 @pytest.mark.parametrize("method", ["allgather", "ring"])
 @pytest.mark.parametrize("planner", ["lpt", "zigzag", "random"])
+@subprocess_test(4)
 def test_cp_multirank_equivalence(method, planner):
     """4 CP ranks × every planner must reproduce full attention exactly
     (the distribution is a permutation, never an approximation)."""
-    code = f"""
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import bam, context_parallel as cp, distribution as dist
-from repro.models.layers import sdpa
-B, T, H, hd = 2, 64, 4, 16
-key = jax.random.PRNGKey(0)
-q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, T, H, hd))
-           for i in range(3))
-segs = [("text", 0, 16), ("mod", 1, 16), ("text", 0, 16), ("mod", 2, 8),
-        ("text", 0, 8)]
-bits_np, pos_np = bam.build_sample_bits(segs, T)
-bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T))
-pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T))
-mask = bam.allowed_mask(bits, bits, pos, pos)[:, None]
-ref = sdpa(q, k, v, mask)
-plan = dist.plan_tokens(bits_np, pos_np, 4, block_size=8,
-                        method={planner!r})
-perm = cp.plan_permutation(plan, T)
-inv = cp.invert_perm(perm)
-mesh = jax.make_mesh((4,), ("cp",))
-args = [jnp.take(a, perm, axis=1) for a in (q, k, v)]
-bp = jnp.take(bits, perm, axis=1); pp_ = jnp.take(pos, perm, axis=1)
-out = cp.cp_attention(mesh, "cp", *args, bp, bp, pp_, pp_,
-                      method={method!r})
-out = jnp.take(out, inv, axis=1)
-d = float(jnp.abs(out - ref).max())
-assert d < 5e-6, d
-print("OK", d)
-"""
-    out = run_with_devices(code, 4)
-    assert "OK" in out
+    q, k, v, bits, pos, bits_np, pos_np = make_case()
+    mask = bam.allowed_mask(bits, bits, pos, pos)[:, None]
+    ref = sdpa(q, k, v, mask)
+    plan = dist.plan_tokens(bits_np, pos_np, 4, block_size=8,
+                            method=planner)
+    perm = cp.plan_permutation(plan, 64)
+    inv = cp.invert_perm(perm)
+    with host_mesh(4, ("cp",)) as mesh:
+        args = [jnp.take(a, perm, axis=1) for a in (q, k, v)]
+        bp = jnp.take(bits, perm, axis=1)
+        pp_ = jnp.take(pos, perm, axis=1)
+        out = cp.cp_attention(mesh, "cp", *args, bp, bp, pp_, pp_,
+                              method=method)
+    out = jnp.take(out, inv, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-6)
 
 
 @pytest.mark.parametrize("method", ["allgather", "ring"])
+@subprocess_test(2)
 def test_cp_multirank_kernel_stats_path(method):
     """Multi-rank CP on the kernel stats path: ring-step / all-gather
     combination of Pallas partials reproduces full attention."""
-    code = f"""
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import bam, context_parallel as cp, distribution as dist
-B, T, H, hd = 1, 64, 2, 16
-key = jax.random.PRNGKey(0)
-q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, T, H, hd))
-           for i in range(3))
-segs = [("text", 0, 16), ("mod", 1, 16), ("text", 0, 16), ("mod", 2, 8),
-        ("text", 0, 8)]
-bits_np, pos_np = bam.build_sample_bits(segs, T)
-bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T))
-pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T))
-ref = cp.cp_reference(q, k, v, bits, bits, pos, pos)
-plan = dist.plan_tokens(bits_np, pos_np, 2, block_size=8, method="lpt")
-perm = cp.plan_permutation(plan, T)
-inv = cp.invert_perm(perm)
-mesh = jax.make_mesh((2,), ("cp",))
-args = [jnp.take(a, perm, axis=1) for a in (q, k, v)]
-bp = jnp.take(bits, perm, axis=1); pp_ = jnp.take(pos, perm, axis=1)
-out = cp.cp_attention(mesh, "cp", *args, bp, bp, pp_, pp_,
-                      method={method!r}, impl="bam_interpret")
-out = jnp.take(out, inv, axis=1)
-d = float(jnp.abs(out - ref).max())
-assert d < 2e-5, d
-print("OK", d)
-"""
-    out = run_with_devices(code, 2)
-    assert "OK" in out
+    q, k, v, bits, pos, bits_np, pos_np = make_case(B=1, H=2)
+    ref = cp.cp_reference(q, k, v, bits, bits, pos, pos)
+    plan = dist.plan_tokens(bits_np, pos_np, 2, block_size=8,
+                            method="lpt")
+    perm = cp.plan_permutation(plan, 64)
+    inv = cp.invert_perm(perm)
+    with host_mesh(2, ("cp",)) as mesh:
+        args = [jnp.take(a, perm, axis=1) for a in (q, k, v)]
+        bp = jnp.take(bits, perm, axis=1)
+        pp_ = jnp.take(pos, perm, axis=1)
+        out = cp.cp_attention(mesh, "cp", *args, bp, bp, pp_, pp_,
+                              method=method, impl="bam_interpret")
+    out = jnp.take(out, inv, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -328,46 +302,36 @@ def test_cp_backward_no_quadratic_intermediate(method):
 
 
 @pytest.mark.parametrize("method", ["allgather", "ring"])
+@subprocess_test(2)
 def test_cp_multirank_grads_kernel_path(method):
     """2 CP ranks on the kernel path: grads through the plan-permuted
     CP attention (reduce-scatter / reverse-ring backward collectives)
     must match the single-device oracle's grads."""
-    code = f"""
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import bam, context_parallel as cp, distribution as dist
-B, T, H, hd = 1, 64, 2, 16
-key = jax.random.PRNGKey(0)
-q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, T, H, hd))
-           for i in range(3))
-segs = [("text", 0, 16), ("mod", 1, 16), ("text", 0, 16), ("mod", 2, 8),
-        ("text", 0, 8)]
-bits_np, pos_np = bam.build_sample_bits(segs, T)
-bits = jnp.broadcast_to(jnp.asarray(bits_np)[None], (B, T))
-pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, T))
-plan = dist.plan_tokens(bits_np, pos_np, 2, block_size=8, method="lpt")
-perm = jnp.asarray(cp.plan_permutation(plan, T))
-bp = jnp.take(bits, perm, axis=1); pp_ = jnp.take(pos, perm, axis=1)
-mesh = jax.make_mesh((2,), ("cp",))
+    q, k, v, bits, pos, bits_np, pos_np = make_case(B=1, H=2)
+    plan = dist.plan_tokens(bits_np, pos_np, 2, block_size=8,
+                            method="lpt")
+    perm = jnp.asarray(cp.plan_permutation(plan, 64))
+    bp = jnp.take(bits, perm, axis=1)
+    pp_ = jnp.take(pos, perm, axis=1)
+    with host_mesh(2, ("cp",)) as mesh:
 
-def loss_cp(q, k, v):
-    qp, kp, vp = (jnp.take(a, perm, axis=1) for a in (q, k, v))
-    out = cp.cp_attention(mesh, "cp", qp, kp, vp, bp, bp, pp_, pp_,
-                          method={method!r}, impl="bam_interpret",
-                          block_q=16, block_k=16)
-    return jnp.sum(out ** 2)   # permutation-invariant scalar
+        def loss_cp(q, k, v):
+            qp, kp, vp = (jnp.take(a, perm, axis=1) for a in (q, k, v))
+            out = cp.cp_attention(mesh, "cp", qp, kp, vp, bp, bp, pp_,
+                                  pp_, method=method,
+                                  impl="bam_interpret",
+                                  block_q=16, block_k=16)
+            return jnp.sum(out ** 2)   # permutation-invariant scalar
 
-def loss_ref(q, k, v):
-    return jnp.sum(cp.cp_reference(q, k, v, bits, bits, pos, pos) ** 2)
+        def loss_ref(q, k, v):
+            return jnp.sum(cp.cp_reference(q, k, v, bits, bits, pos,
+                                           pos) ** 2)
 
-g1 = jax.grad(loss_cp, (0, 1, 2))(q, k, v)
-g2 = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
-for a, b in zip(g1, g2):
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                               atol=2e-4, rtol=2e-4)
-print("OK")
-"""
-    out = run_with_devices(code, 2)
-    assert "OK" in out
+        g1 = jax.grad(loss_cp, (0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
 
 
 def test_cp_train_step_contextplan_layout():

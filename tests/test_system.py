@@ -115,3 +115,46 @@ def test_multidataset_modes_produce_valid_bam():
         if docs > 1:
             assert len(np.unique(bam.instance_id(
                 bits[nonpad].astype(np.uint32)))) == docs
+
+
+def test_dryrun_preserves_user_xla_flags():
+    """Regression: importing repro.launch.dryrun used to CLOBBER any
+    user-set XLA_FLAGS with its 512-device override. It must append
+    the device-count flag only when the user has not already chosen
+    one, and never drop unrelated flags."""
+    import os
+    import subprocess
+    import sys
+
+    from .helpers import REPO
+
+    code = ("import os, repro.launch.dryrun, jax\n"
+            "print(os.environ['XLA_FLAGS'])\n"
+            "print(jax.device_count())")
+
+    def run(xla_flags):
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        if xla_flags is not None:
+            env["XLA_FLAGS"] = xla_flags
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True,
+                              timeout=600, cwd=REPO)
+        assert proc.returncode == 0, proc.stderr
+        flags, devices = proc.stdout.strip().rsplit("\n", 1)
+        return flags, int(devices)
+
+    # an explicit device-count choice wins — kept verbatim, honored
+    flags, devices = run("--xla_force_host_platform_device_count=4")
+    assert flags == "--xla_force_host_platform_device_count=4"
+    assert devices == 4
+    # unrelated user flags survive alongside the appended default
+    flags, devices = run("--xla_cpu_enable_fast_math=false")
+    assert "--xla_cpu_enable_fast_math=false" in flags
+    assert "--xla_force_host_platform_device_count=512" in flags
+    assert devices == 512
+    # no user flags: the dry-run's 512-device default applies
+    flags, devices = run(None)
+    assert flags == "--xla_force_host_platform_device_count=512"
+    assert devices == 512
