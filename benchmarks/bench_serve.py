@@ -1,0 +1,105 @@
+"""Serving throughput: tokens/sec vs batch size over the paged cache.
+
+Two decode attention paths through the same ``ServingEngine``:
+
+  * ``xla``    — dense page-table gather + reference masked softmax;
+  * ``kernel`` — the paged flash-decode Pallas kernel in interpret
+    mode (CPU container; ordering/shape check, not TPU perf — the
+    compacted grid's step counts ARE the TPU-relevant figure).
+
+Each row reports wall time per generated token and tokens/sec for one
+(batch size, path) cell, continuous batching included (requests admit
+as rows free up). A final row reports the decode grid's page-skip
+fraction on a multimodal batch — the fraction of resident KV pages the
+kernel never visits (no grid step, no DMA), which is the serving twin
+of the training kernel's block-sparsity win. Rows are mirrored into
+``BENCH_serve.json``.
+"""
+import os
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core import bam
+from repro.models import api
+from repro.serving import ServingEngine
+
+from .common import emit
+
+SERVE_JSON = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+
+
+def _cfg(smoke: bool) -> ModelConfig:
+    if smoke:
+        return ModelConfig(name="serve-smoke", family="dense",
+                           num_layers=2, d_model=32, num_heads=4,
+                           num_kv_heads=2, d_ff=64, vocab_size=64,
+                           dtype="float32", remat=False,
+                           seq_shard_activations=False, attn_softcap=10.0)
+    return ModelConfig(name="serve-bench", family="dense", num_layers=4,
+                       d_model=128, num_heads=8, num_kv_heads=2,
+                       d_ff=256, vocab_size=256, dtype="float32",
+                       remat=False, seq_shard_activations=False,
+                       attn_softcap=10.0)
+
+
+def _drive(params, cfg, *, batch, attn, prompt_len, max_new, page_size=8):
+    rng = np.random.default_rng(0)
+    pool = 1 + batch * (-(-(prompt_len + max_new) // page_size) + 1)
+    eng = ServingEngine(params, cfg, num_pages=pool, page_size=page_size,
+                        max_batch=batch, attn=attn)
+    rids = [eng.submit(rng.integers(1, cfg.vocab_size, size=prompt_len),
+                       max_new_tokens=max_new) for _ in range(batch)]
+    out = eng.run()
+    return sum(len(out[r]) for r in rids), eng
+
+
+def run(smoke: bool = False):
+    cfg = _cfg(smoke)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batches = (1, 2) if smoke else (1, 2, 4)
+    prompt_len = 8 if smoke else 32
+    max_new = 3 if smoke else 16
+    if os.path.exists(SERVE_JSON):
+        os.remove(SERVE_JSON)
+
+    for attn, label in (("xla", "xla"), ("interpret", "kernel")):
+        for B in batches:
+            kw = dict(batch=B, attn=attn, prompt_len=prompt_len,
+                      max_new=max_new)
+            _drive(params, cfg, **kw)          # warm the jit caches
+            t0 = time.perf_counter()
+            toks, _ = _drive(params, cfg, **kw)
+            dt = time.perf_counter() - t0
+            tps = toks / dt
+            emit(f"serve/{label}-B{B}", dt * 1e6 / toks,
+                 f"tokens_per_s={tps:.1f}", json_path=SERVE_JSON,
+                 path=label, batch=B, tokens_per_s=round(tps, 1),
+                 tokens=toks)
+
+    # grid compaction on a multimodal batch: text-only continuations
+    # over image-heavy prompts never visit the image pages
+    ps = 8
+    segs = [("text", 0, ps), ("mod", 1, 2 * ps), ("text", 0, ps)]
+    bits, pos = bam.build_sample_bits(segs, 4 * ps)
+    eng = ServingEngine(params, cfg, num_pages=32, page_size=ps,
+                        max_batch=2, attn="interpret")
+    t0 = time.perf_counter()
+    for _ in range(2):
+        eng.submit(np.arange(1, 4 * ps + 1), bits=bits, positions=pos,
+                   max_new_tokens=2)
+    eng.run()
+    us = (time.perf_counter() - t0) * 1e6
+    grid = eng.last_grid
+    emit("serve/grid-skip-mm", us,
+         f"skip_fraction={grid.skip_fraction:.3f};"
+         f"steps={grid.n_active_steps}/{grid.n_dense_steps}",
+         json_path=SERVE_JSON, path="kernel",
+         skip_fraction=round(grid.skip_fraction, 3))
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   spmd      — distributed shard_map executor vs sequential replay
               (multi-device subprocess; fails loudly on grad or
               peak divergence)
+  serve     — paged-cache serving throughput: tokens/sec vs batch
+              size, xla gather vs paged flash-decode kernel, plus
+              the multimodal page-skip fraction
 
 ``--smoke`` shrinks every benchmark to a tiny grid with one repeat —
 seconds, not minutes — so CI can execute all of them on every push and
@@ -55,6 +58,9 @@ def main() -> None:
     if on("spmd"):
         from benchmarks import bench_spmd_executor
         bench_spmd_executor.run(smoke=smoke)
+    if on("serve"):
+        from benchmarks import bench_serve
+        bench_serve.run(smoke=smoke)
 
 
 if __name__ == '__main__':

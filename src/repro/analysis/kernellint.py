@@ -35,6 +35,15 @@ Small-case dynamic rules (numpy-only, no kernel launch):
 * ``block-shape-divides`` — the kernel wrapper's padding really does
   round every sequence axis up to a block multiple (the property every
   BlockSpec shape in the file relies on).
+* ``decode-grid-coverage`` — the serving decode grid
+  (``serving.paged_cache.build_decode_grid``) visits every physical
+  page the dense mask allows, frames each batch row exactly once,
+  routes inactive/pad steps to the null page, and keeps ``pad_to``
+  steps inert.
+* ``page-grid-divisibility`` — page-table allocations are whole pages,
+  the flat KV view is exactly page-padded, and
+  ``paged_decode_attention`` rejects operands whose shapes disagree
+  with the pool before any kernel is built.
 """
 from __future__ import annotations
 
@@ -60,6 +69,12 @@ register_rule("scalar-prefetch-static", "kernellint",
 register_rule("block-shape-divides", "kernellint",
               "kernel-wrapper padding rounds sequence axes to block "
               "multiples")
+register_rule("decode-grid-coverage", "kernellint",
+              "build_decode_grid visits every page the bitfield mask "
+              "allows and frames each batch row exactly once")
+register_rule("page-grid-divisibility", "kernellint",
+              "page-table capacity, pool shapes, and the decode "
+              "kernel's page blocks agree on page_size")
 
 KERNELS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "kernels")
@@ -344,6 +359,142 @@ def check_block_divisibility(
     return out
 
 
+def check_decode_grid_coverage(layouts=_COVERAGE_LAYOUTS,
+                               page_sizes: Sequence[int] = (4, 8),
+                               seq_len: int = 14) -> List[Finding]:
+    """Serving twin of ``check_block_map_coverage``: the decode grid's
+    physical-page step list must visit every page holding a KV slot the
+    dense mask allows, frame each batch row's steps exactly once
+    (online-softmax init/flush), route every inactive or padding step
+    to the null page, and give empty batch rows a flush step."""
+    from repro.core import bam
+    from repro.serving.paged_cache import (NULL_PAGE, PageTable,
+                                           build_decode_grid,
+                                           decode_grid_bucket)
+    out: List[Finding] = []
+    queries = (bam.text_token(), bam.text_token((1, 2)),
+               bam.modality_token(1))
+    for li, segs in enumerate(layouts):
+        bits, pos = bam.build_sample_bits(list(segs), seq_len)
+        for ps in page_sizes:
+            table = PageTable(8, ps)
+            table.alloc(0, seq_len)
+            table.write(0, np.arange(seq_len), bits, pos)
+            pages = table.pages_of(0)
+            kv_bits, kv_pos = table.kv_view(0)
+            for qi, qb in enumerate(queries):
+                qp = int(pos.max()) + 1
+                loc = f"layout{li} ps={ps} query{qi}"
+                grid = build_decode_grid(
+                    table, [0, None], np.array([qb, 0], np.uint32),
+                    np.array([qp, 0], np.int32))
+                dense = np.asarray(bam.allowed_mask(
+                    np.array([[qb]], np.uint32), kv_bits[None],
+                    np.array([[qp]], np.int32), kv_pos[None]))[0, 0]
+                needed = {pages[int(s) // ps] for s in
+                          np.nonzero(dense)[0]}
+                active = {int(p) for p, r, a in
+                          zip(grid.page, grid.req, grid.active)
+                          if a and r == 0}
+                for page in sorted(needed - active):
+                    out.append(finding(
+                        "decode-grid-coverage", loc,
+                        f"grid never visits page {page} though the "
+                        f"mask allows slots in it — KV would be "
+                        f"dropped from the decode softmax"))
+                for row in (0, 1):
+                    sel = grid.req == row
+                    f, l = grid.first[sel], grid.last[sel]
+                    if f.sum() != 1 or l.sum() != 1 or not f[0] \
+                            or not l[-1]:
+                        out.append(finding(
+                            "decode-grid-coverage", loc,
+                            f"batch row {row} is not framed exactly "
+                            f"once (first={f.tolist()}, "
+                            f"last={l.tolist()}) — scratch init/flush "
+                            f"would misfire"))
+                if (grid.page[grid.active == 0] != NULL_PAGE).any():
+                    out.append(finding(
+                        "decode-grid-coverage", loc,
+                        "inactive step points at a real page — it "
+                        "would DMA data the kernel must not read"))
+                padded = build_decode_grid(
+                    table, [0, None], np.array([qb, 0], np.uint32),
+                    np.array([qp, 0], np.int32),
+                    pad_to=decode_grid_bucket(grid.n_steps + 1))
+                pad = padded.arrays()
+                if padded.n_active_steps != grid.n_active_steps or \
+                        pad[4][grid.n_steps:].any() or \
+                        pad[2][grid.n_steps:].any() or \
+                        pad[3][grid.n_steps:].any():
+                    out.append(finding(
+                        "decode-grid-coverage", loc,
+                        "pad_to steps are not inert (active/first/"
+                        "last must all be 0 past the real steps)"))
+            table.free(0)
+    return out
+
+
+def check_page_divisibility(
+        cases: Sequence[Tuple[int, int]] = ((5, 4), (9, 8), (1, 4),
+                                            (16, 8), (17, 8))
+        ) -> List[Finding]:
+    """Page arithmetic the decode kernel's BlockSpecs rely on: every
+    allocation is a whole number of pages, the flat KV view is exactly
+    page-padded, and the kernel wrapper rejects metadata whose shape
+    disagrees with the pool's (P, page_size)."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_decode import paged_decode_attention
+    from repro.serving.paged_cache import PageTable
+    out: List[Finding] = []
+    for n_tokens, ps in cases:
+        table = PageTable(16, ps)
+        table.alloc(0, n_tokens)
+        cap = table.capacity(0)
+        loc = f"PageTable n_tokens={n_tokens} page_size={ps}"
+        if cap % ps or cap < n_tokens:
+            out.append(finding(
+                "page-grid-divisibility", loc,
+                f"capacity {cap} is not a page multiple covering "
+                f"{n_tokens} tokens"))
+        kv_bits, kv_pos = table.kv_view(0)
+        if len(kv_bits) != cap or len(kv_pos) != cap:
+            out.append(finding(
+                "page-grid-divisibility", loc,
+                f"kv_view length {len(kv_bits)} != page-padded "
+                f"capacity {cap} — the kernel's page blocks would "
+                f"run off the metadata"))
+    # wrapper-side validation: shape disagreements must raise before
+    # any pallas_call is built
+    ps = 4
+    q = jnp.zeros((1, 2, 8))
+    pages = jnp.zeros((3, ps, 2, 8))
+    bits_ok = jnp.zeros((3, ps), jnp.uint32)
+    pos_ok = jnp.zeros((3, ps), jnp.int32)
+    steps = tuple(jnp.zeros(2, jnp.int32) for _ in range(5))
+    bad = (
+        ("kv metadata off-page", dict(kv_bits=jnp.zeros((3, ps + 1),
+                                                        jnp.uint32))),
+        ("GQA non-divisible", dict(q=jnp.zeros((1, 3, 8)))),
+        ("q metadata shape", dict(q_bits=jnp.zeros((2, 1), jnp.uint32))),
+    )
+    for label, override in bad:
+        kw = dict(q=q, k_pages=pages, v_pages=pages,
+                  q_bits=jnp.zeros((1, 1), jnp.uint32),
+                  q_pos=jnp.zeros((1, 1), jnp.int32),
+                  kv_bits=bits_ok, kv_pos=pos_ok, steps=steps)
+        kw.update(override)
+        try:
+            paged_decode_attention(**kw)
+        except ValueError:
+            continue
+        out.append(finding(
+            "page-grid-divisibility", f"paged_decode_attention {label}",
+            "mismatched operand accepted — the kernel would index "
+            "out of bounds at runtime"))
+    return out
+
+
 def lint_kernels(path: Optional[str] = None) -> List[Finding]:
     """All kernellint rules: AST rules over every ``.py`` under
     ``path`` (default: ``src/repro/kernels``) + the dynamic
@@ -356,4 +507,6 @@ def lint_kernels(path: Optional[str] = None) -> List[Finding]:
     out += check_block_map_coverage()
     out += check_scalar_prefetch_static()
     out += check_block_divisibility()
+    out += check_decode_grid_coverage()
+    out += check_page_divisibility()
     return out

@@ -1,0 +1,239 @@
+"""Single-query flash-decode over a paged BAM KV cache — Pallas TPU.
+
+Decode attention is one query token per request against that request's
+resident cache pages. The kernel runs a flattened grid
+
+    grid = (H, n_steps),  dimension_semantics = (parallel, arbitrary)
+
+where the step axis is the host-precomputed active-page list from
+``repro.serving.paged_cache.build_decode_grid``: per batch row, a
+k-major sweep over only the pages its query bitfield can reach. The
+five scalar-prefetch operands (``req``, ``page``, ``first``, ``last``,
+``active``) drive every BlockSpec index map, so a fully-masked page —
+an image's tokens while decoding a text-only document, another
+modality's stream, a pruned sliding-window span — costs neither a grid
+step nor a K/V page DMA. ``first``/``last`` frame each request's steps
+for online-softmax scratch init/flush, the same contract as
+``bam.BlockMask`` (and checked by the same kernellint coverage rules).
+
+GQA is folded into the K/V index maps (``h // n_rep``) like the
+training kernels — no head-expanded K/V ever materializes. The mask is
+evaluated in-registers from the bitfields via the training kernels'
+``_mask_tile`` (one [1, page_size] tile of it lives in VREGs per step).
+Softcap and sliding window are static params; ``window`` constrains
+text queries only, mirroring ``bam.allowed_mask``.
+
+The step arrays are *traced* operands (lengths grow every decode step)
+but their length is a static shape — callers bucket ``n_steps``
+(``decode_grid_bucket``) to keep the jit cache warm; pad steps carry
+``active=0`` and touch nothing.
+
+``paged_decode_ref`` is the XLA fallback: gather each request's pages
+dense via its page-table row (null-page padded) and run the reference
+masked softmax. It is the serving engine's ``attn="xla"`` path and the
+oracle the kernel is tested against.
+
+Decode-only: no VJP. Shapes here are decode-shaped (one query row per
+step) — correct under ``interpret=True`` anywhere, efficient on real
+TPU once requests are packed to sublane multiples (a follow-up the
+docstring of ``paged_decode_attention`` records).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bam_attention import (_compiler_params_cls, _mask_tile,
+                                         NEG_INF)
+from repro.kernels.ref import bam_attention_ref
+
+
+# ---------------------------------------------------------------------------
+# Kernel body
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(req_ref, page_ref, first_ref, last_ref, active_ref,
+                         qb_ref, qp_ref, kb_ref, kp_ref,
+                         q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *,
+                         softcap: float, window: int, scale: float,
+                         block_skip: bool):
+    t = pl.program_id(1)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    allowed = _mask_tile(qb_ref[0], kb_ref[0], qp_ref[0], kp_ref[0],
+                         window)                     # [1, page_size]
+    is_active = active_ref[t] == 1
+
+    def compute():
+        q = q_ref[0, 0, :].astype(jnp.float32)[None, :]      # [1, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [ps, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(allowed, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(allowed, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if block_skip:
+        # a page that survived grid compaction can still be fully
+        # masked for THIS layer's sliding window — skip its MXU work
+        pl.when(is_active & jnp.any(allowed))(compute)
+    else:
+        pl.when(is_active)(compute)
+
+    @pl.when(last_ref[t] == 1)
+    def _finish():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0, 0, :] = out[0].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Index maps — named defs so kernellint's arity rule can resolve them:
+# grid rank 2 (h, t) + 5 scalar-prefetch refs = 7 arguments each.
+# ---------------------------------------------------------------------------
+
+def _im_qrow(h, t, req, page, first, last, active):
+    return (req[t], 0)
+
+
+def _im_page_meta(h, t, req, page, first, last, active):
+    return (page[t], 0)
+
+
+def _im_qvec(h, t, req, page, first, last, active):
+    return (req[t], h, 0)
+
+
+def _im_ktile(h, t, req, page, first, last, active, n_rep=1):
+    return (page[t], 0, h // n_rep, 0)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrapper
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q, k_pages, v_pages, q_bits, q_pos,
+                           kv_bits, kv_pos, steps, *,
+                           softcap: float = 0.0, window: int = 0,
+                           block_skip: bool = True,
+                           interpret: bool = False):
+    """Paged single-query BAM flash decode.
+
+    q: [B, H, hd] (one token per request row);
+    k_pages/v_pages: [P, page_size, Hkv, hd] (H % Hkv == 0);
+    q_bits: [B, 1] uint32; q_pos: [B, 1] int32;
+    kv_bits: [P, page_size] uint32; kv_pos: [P, page_size] int32;
+    steps: (req, page, first, last, active) int32 [n_steps] arrays from
+    ``build_decode_grid(...).arrays()`` — traced operands; their length
+    is the static grid extent.
+
+    Returns [B, H, hd]. Rows whose steps are all inactive (empty batch
+    slots, fully-masked queries) come back exactly zero.
+
+    One query row per grid step keeps the kernel shape-true to
+    continuous batching (any mix of requests, any ragged lengths); on
+    real TPU, packing 8 requests per sublane tile is the known
+    follow-up for MXU utilization — the grid contract here doesn't
+    change, only the q BlockSpec row count.
+    """
+    B, H, hd = q.shape
+    P, page_size, Hkv, hd_k = k_pages.shape
+    if hd != hd_k:
+        raise ValueError(f"q head_dim {hd} != kv head_dim {hd_k}")
+    if H % Hkv:
+        raise ValueError(f"GQA needs H % Hkv == 0, got H={H} Hkv={Hkv}")
+    n_rep = H // Hkv
+    if kv_bits.shape != (P, page_size) or kv_pos.shape != (P, page_size):
+        raise ValueError(
+            f"kv page metadata {kv_bits.shape}/{kv_pos.shape} does not "
+            f"match the page pool ({P}, {page_size})")
+    if q_bits.shape != (B, 1) or q_pos.shape != (B, 1):
+        raise ValueError(
+            f"q_bits/q_pos must be [B, 1]=({B}, 1), got "
+            f"{q_bits.shape}/{q_pos.shape}")
+    req, page, first, last, active = (jnp.asarray(s, jnp.int32)
+                                      for s in steps)
+    n_steps = req.shape[0]
+    if not all(s.shape == (n_steps,) for s in (page, first, last, active)):
+        raise ValueError("decode-grid step arrays disagree on length")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(H, n_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1), _im_qrow),
+            pl.BlockSpec((1, 1), _im_qrow),
+            pl.BlockSpec((1, page_size), _im_page_meta),
+            pl.BlockSpec((1, page_size), _im_page_meta),
+            pl.BlockSpec((1, 1, hd), _im_qvec),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         functools.partial(_im_ktile, n_rep=n_rep)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         functools.partial(_im_ktile, n_rep=n_rep)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), _im_qvec),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, softcap=softcap,
+                          window=window, scale=hd ** -0.5,
+                          block_skip=block_skip),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        compiler_params=_compiler_params_cls()(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(req, page, first, last, active,
+      q_bits, q_pos, kv_bits, kv_pos, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# XLA reference / fallback
+# ---------------------------------------------------------------------------
+
+def paged_decode_ref(q, k_pages, v_pages, q_bits, q_pos, kv_bits, kv_pos,
+                     page_tables, *, softcap: float = 0.0,
+                     window: int = 0):
+    """Dense-gather decode oracle: materialize each request's resident
+    pages via its page-table row (``[B, max_pages]`` int32, padded with
+    the null page, whose bits are all zero and mask out) and run the
+    reference masked softmax. Same signature family as the kernel but
+    addressed by table rows instead of a step list."""
+    B, H, hd = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    mp = page_tables.shape[1]
+    pt = jnp.asarray(page_tables, jnp.int32)
+    k = k_pages[pt].reshape(B, mp * page_size, Hkv, hd)
+    v = v_pages[pt].reshape(B, mp * page_size, Hkv, hd)
+    bits = kv_bits[pt].reshape(B, mp * page_size)
+    pos = kv_pos[pt].reshape(B, mp * page_size)
+    out = bam_attention_ref(q[:, None], k, v, q_bits, bits, q_pos, pos,
+                            softcap=softcap, window=window)
+    return out[:, 0]

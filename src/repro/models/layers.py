@@ -335,6 +335,16 @@ def cache_update(cache_k, cache_v, k_new, v_new, index):
     return k, v
 
 
+def cache_update_ragged(cache_k, cache_v, k_new, v_new, index):
+    """Per-row insert for continuous batching: ``index`` is [B] int32
+    (each request sits at its own ragged cache offset), ``k_new``/
+    ``v_new`` are one-token [B, 1, Hkv, hd]."""
+    rows = jnp.arange(cache_k.shape[0])
+    k = cache_k.at[rows, index].set(k_new[:, 0].astype(cache_k.dtype))
+    v = cache_v.at[rows, index].set(v_new[:, 0].astype(cache_v.dtype))
+    return k, v
+
+
 # ---------------------------------------------------------------------------
 # Stacked-layer init helper
 # ---------------------------------------------------------------------------

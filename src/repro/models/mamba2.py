@@ -261,8 +261,8 @@ def hidden(params, cfg: ModelConfig, batch):
         x, _ = lax.scan(mamba_step, x, lp_group)
         if cfg.attn_layer_period:
             def attn_blk(x):
-                out, _ = T._block(cfg, params["shared_attn"], x, batch,
-                                  jnp.int32(0), None)
+                out, _, _ = T._block(cfg, params["shared_attn"], x, batch,
+                                     jnp.int32(0), None)
                 return out
             if cfg.remat:
                 attn_blk = jax.checkpoint(attn_blk)

@@ -282,7 +282,7 @@ def _run_dense_prefix(params, cfg: ModelConfig, x, batch):
         lp, i = xs
 
         def blk(x):
-            out, _ = T._block(cfg, lp, x, batch, i, None)
+            out, _, _ = T._block(cfg, lp, x, batch, i, None)
             return out
         if cfg.remat:
             blk = jax.checkpoint(blk)
@@ -308,7 +308,7 @@ def hidden(params, cfg: ModelConfig, batch):
             return T._block(moe_cfg, lp, x, batch, i, ffn)
         if cfg.remat:
             blk = jax.checkpoint(blk)
-        x, a = blk(x)
+        x, a, _ = blk(x)
         return (x, aux + a), None
 
     (x, aux), _ = lax.scan(

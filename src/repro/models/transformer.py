@@ -135,7 +135,7 @@ def _block(cfg: ModelConfig, p, x, batch, layer_idx, ffn: Optional[FFN]):
         kernel_bits = batch["bits"]
 
     h = L.apply_norm(cfg, p["ln1"], x)
-    attn_out, _ = L.run_attention(
+    attn_out, kv = L.run_attention(
         p["attn"], cfg, h, q_pos=batch["positions"], mask_fn=mask_fn,
         pos3=batch.get("pos3"), bits=kernel_bits,
         window=cfg.sliding_window if kernel_bits is not None else 0)
@@ -153,7 +153,10 @@ def _block(cfg: ModelConfig, p, x, batch, layer_idx, ffn: Optional[FFN]):
     if cfg.seq_shard_activations:
         from repro.launch import sharding as shd
         x = shd.constrain_residual(x)
-    return x, aux
+    # kv: the layer's projected+roped K/V — discarded in training
+    # (hidden's scan), captured by the serving prefill so prompt K/V
+    # can be written straight into the paged decode cache
+    return x, aux, kv
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +184,7 @@ def hidden(params, cfg: ModelConfig, batch, ffn: Optional[FFN] = None):
             return _block(cfg, lp, x, batch, i, ffn)
         if cfg.remat:
             blk = jax.checkpoint(blk)
-        x, a = blk(x)
+        x, a, _ = blk(x)
         return (x, aux + a), None
 
     (x, aux), _ = lax.scan(
@@ -209,10 +212,13 @@ def forward(params, cfg: ModelConfig, batch, ffn: Optional[FFN] = None):
 
 def _cache_cfg(cfg: ModelConfig) -> ModelConfig:
     if cfg.decode_kv_replicate > cfg.num_kv_heads:
-        assert cfg.num_heads % cfg.decode_kv_replicate == 0 and \
-            cfg.decode_kv_replicate % cfg.num_kv_heads == 0, \
-            ("decode_kv_replicate must divide num_heads and be a "
-             "multiple of num_kv_heads", cfg.name)
+        if (cfg.num_heads % cfg.decode_kv_replicate != 0
+                or cfg.decode_kv_replicate % cfg.num_kv_heads != 0):
+            raise ValueError(
+                f"{cfg.name}: decode_kv_replicate="
+                f"{cfg.decode_kv_replicate} must divide num_heads="
+                f"{cfg.num_heads} and be a multiple of num_kv_heads="
+                f"{cfg.num_kv_heads}")
         return cfg.replace(num_kv_heads=cfg.decode_kv_replicate,
                            decode_kv_replicate=0)
     return cfg
@@ -243,7 +249,6 @@ def decode_step(params, cfg: ModelConfig, cache, batch,
         kv_pos < cur[:, None], cache["bits"],
         jnp.where(kv_pos == cur[:, None],
                   jnp.broadcast_to(q_bits, kv_pos.shape), jnp.uint32(0)))
-    idx = cur[0]  # assigned decode shapes: all rows share the insert index
 
     def body(x, xs):
         lp, ck, cv, i = xs
@@ -261,7 +266,9 @@ def decode_step(params, cfg: ModelConfig, cache, batch,
             if rep > k.shape[2]:
                 k = L.repeat_kv(k, rep // k.shape[2])
                 v = L.repeat_kv(v, rep // v.shape[2])
-            nk, nv = L.cache_update(ck, cv, k, v, idx)
+            # per-row scatter: continuous batching decodes requests at
+            # ragged cache offsets, so each row inserts at its own cur
+            nk, nv = L.cache_update_ragged(ck, cv, k, v, cur)
             store["k"], store["v"] = nk, nv
             return nk, nv
 

@@ -1,0 +1,32 @@
+"""Serving subsystem: paged BAM KV cache + continuous batching.
+
+Three layers (see ``docs/serving.md``):
+
+* ``paged_cache`` — host ``PageTable`` + device page pool; per-page BAM
+  bitfield metadata; ``build_decode_grid`` compacts masked pages out of
+  the decode kernel's grid with the training kernels' block-map
+  machinery; ``plan_page_owners`` records the ContextPlan prefill
+  layout.
+* ``model`` — jit-able ``paged_prefill`` (prompt forward that scatters
+  K/V straight into pages) and ``paged_decode_step`` (ragged one-token
+  decode over resident pages, XLA or Pallas kernel attention).
+* ``engine`` — ``ServingEngine``: request queue, admission control with
+  upfront page budgets, prefill/decode interleaving, greedy streaming.
+"""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.model import (check_serving_cfg, grid_window,
+                                 make_paged_decode_step, paged_decode_step,
+                                 paged_prefill, prefill_forward,
+                                 static_layer_window)
+from repro.serving.paged_cache import (NULL_PAGE, DecodeGrid, PageTable,
+                                       build_decode_grid,
+                                       decode_grid_bucket,
+                                       init_paged_cache, plan_page_owners)
+
+__all__ = [
+    "NULL_PAGE", "DecodeGrid", "PageTable", "Request", "ServingEngine",
+    "build_decode_grid", "check_serving_cfg", "decode_grid_bucket",
+    "grid_window", "init_paged_cache", "make_paged_decode_step",
+    "paged_decode_step", "paged_prefill", "plan_page_owners",
+    "prefill_forward", "static_layer_window",
+]

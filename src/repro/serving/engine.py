@@ -1,0 +1,309 @@
+"""Continuous batching engine over the paged BAM decode cache.
+
+The engine owns four pieces of state and interleaves two jitted steps:
+
+* a host ``PageTable`` (free list + logical->physical mapping + bits/pos
+  mirrors) and the device page pool from ``init_paged_cache``;
+* a waiting queue of ``Request``s and a fixed bank of ``max_batch``
+  decode rows (``None`` = empty slot).
+
+``step()`` is one scheduler tick: admit waiting requests into free rows
+(admission control reserves the *full* prompt+generation page budget up
+front, so an admitted request can never hit pool exhaustion mid-
+flight), prefill each admission (one jitted prompt forward that
+scatters K/V straight into its pages and emits its first token), then
+run one batched decode step for every occupied row. Requests finish on
+EOS or ``max_new_tokens``; their pages are freed and their bits/pos
+metadata scrubbed (host and device) so reused pages never leak stale
+mask state, and the row is immediately available to the next admission
+— classic continuous batching, no generation-length barrier.
+
+Decode attention runs either through the XLA dense-gather reference
+(``attn="xla"``) or the paged flash-decode kernel (``attn="kernel"`` /
+``"interpret"``); the kernel path gets its step list from
+``build_decode_grid`` — per-request active-page compaction, bucketed
+(``decode_grid_bucket``) so the jit cache stays warm while caches grow.
+
+Greedy decoding is intentional: continuous batching must be
+*composition-invariant* (a request's tokens do not depend on which
+other requests share the batch), and the determinism test in
+``tests/test_serving.py`` asserts exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bam
+from repro.serving import model as M
+from repro.serving.paged_cache import (NULL_PAGE, PageTable,
+                                       build_decode_grid,
+                                       decode_grid_bucket,
+                                       init_paged_cache, plan_page_owners)
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=None)
+def _jitted_steps(cfg, attn: str):
+    """Engines with the same (frozen) cfg and attention path share one
+    pair of jitted step functions, so spinning up a second engine — the
+    determinism tests, the benchmark's per-batch-size runs — reuses the
+    compile cache instead of retracing from scratch."""
+    return (jax.jit(partial(M.paged_prefill, cfg=cfg)),
+            jax.jit(partial(M.paged_decode_step, cfg=cfg, attn=attn)))
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``tokens``/``bits``/``positions`` cover
+    the (unpadded) prompt; ``gen_bits`` is the bitfield stamped on every
+    generated token (text by default — generation emits text even when
+    the prompt is multimodal)."""
+    rid: int
+    tokens: np.ndarray                  # [T] int32 prompt
+    max_new_tokens: int
+    bits: Optional[np.ndarray] = None       # [T] uint32 (None = causal text)
+    positions: Optional[np.ndarray] = None  # [T] int32 (None = arange)
+    gen_bits: int = 0                   # 0 -> bam.text_token() at admission
+    eos_id: Optional[int] = None
+    plan: object = None                 # optional ContextPlan for prefill
+    # -- runtime state (engine-owned) --------------------------------------
+    generated: List[int] = dataclasses.field(default_factory=list)
+    next_idx: int = 0                   # next logical cache index
+    next_pos: int = 0                   # next semantic position
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, *, num_pages: int = 64,
+                 page_size: int = 16, max_batch: int = 4,
+                 attn: str = "xla", cache_dtype=None):
+        M.check_serving_cfg(cfg)
+        if attn not in M.ATTN_PATHS:
+            raise ValueError(f"attn={attn!r}; pick from {M.ATTN_PATHS}")
+        self.params = params
+        self.cfg = cfg
+        self.attn = attn
+        self.max_batch = max_batch
+        self.table = PageTable(num_pages, page_size)
+        self.cache = init_paged_cache(cfg, num_pages, page_size,
+                                      dtype=cache_dtype)
+        self.rows: List[Optional[int]] = [None] * max_batch
+        self.requests: Dict[int, Request] = {}
+        self.queue: deque = deque()
+        self._next_rid = 0
+        self.grid_window = M.grid_window(cfg)
+        self._prefill_fn, self._decode_fn = _jitted_steps(cfg, attn)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, tokens, *, bits=None, positions=None,
+               max_new_tokens: int = 16, eos_id: Optional[int] = None,
+               gen_bits: Optional[int] = None, plan=None) -> int:
+        """Queue a request; returns its rid. ``bits`` (uint32 [T]) carry
+        the prompt's multimodal BAM bitfields (None = causal text);
+        ``plan`` lays the prompt's pages out in ContextPlan order."""
+        rid = self._next_rid
+        self._next_rid += 1
+        r = Request(
+            rid=rid, tokens=np.asarray(tokens, np.int32).reshape(-1),
+            max_new_tokens=int(max_new_tokens),
+            bits=None if bits is None else
+            np.asarray(bits, np.uint32).reshape(-1),
+            positions=None if positions is None else
+            np.asarray(positions, np.int32).reshape(-1),
+            gen_bits=int(gen_bits) if gen_bits is not None
+            else bam.text_token(),
+            eos_id=eos_id, plan=plan)
+        if r.bits is not None and len(r.bits) != len(r.tokens):
+            raise ValueError(
+                f"request {rid}: bits length {len(r.bits)} != prompt "
+                f"length {len(r.tokens)}")
+        self.requests[rid] = r
+        self.queue.append(rid)
+        return rid
+
+    # -- scheduling --------------------------------------------------------
+
+    def _padded_len(self, n: int) -> int:
+        ps = self.table.page_size
+        return -(-n // ps) * ps
+
+    def _page_budget(self, r: Request) -> int:
+        # prompt (page-padded) + every generated token that re-enters
+        # the cache as a decode query (the last one never does)
+        return self.table.pages_needed(
+            self._padded_len(len(r.tokens)) + max(r.max_new_tokens - 1, 0))
+
+    def _admit(self) -> List[int]:
+        admitted = []
+        while self.queue and None in self.rows:
+            r = self.requests[self.queue[0]]
+            if self._page_budget(r) > self.table.num_free:
+                break   # FIFO: don't starve the head of the queue
+            self.queue.popleft()
+            row = self.rows.index(None)
+            self.rows[row] = r.rid
+            admitted.append(r.rid)
+        return admitted
+
+    def _prefill(self, r: Request) -> None:
+        """Jitted prompt forward -> K/V scattered into r's pages; emits
+        the request's first generated token from the last-prompt-token
+        logits."""
+        T = len(r.tokens)
+        Tp = self._padded_len(T)
+        budget_tokens = Tp + max(r.max_new_tokens - 1, 0)
+        self.table.alloc(r.rid, budget_tokens)
+
+        tokens = np.zeros(Tp, np.int32)
+        tokens[:T] = r.tokens
+        bits = np.zeros(Tp, np.uint32)
+        bits[:T] = r.bits if r.bits is not None \
+            else np.full(T, bam.text_token(), np.uint32)
+        pos = np.full(Tp, -1, np.int32)
+        pos[:T] = r.positions if r.positions is not None \
+            else np.arange(T, dtype=np.int32)
+
+        last_row = T - 1
+        if r.plan is not None:
+            layout = r.plan.apply(Tp)
+            perm = np.asarray(layout["perm"])
+            tokens, bits, pos = tokens[perm], bits[perm], pos[perm]
+            last_row = int(np.asarray(layout["inv_perm"])[T - 1])
+            owners = plan_page_owners(layout, self.table.page_size)
+            pages = self.table.pages_of(r.rid)[:len(owners)]
+            self.table.page_owner[pages] = owners
+
+        idx = np.arange(Tp)
+        self.table.write(r.rid, idx, bits, pos)
+        page, slot = self.table.coords(r.rid, idx)
+        batch = {"tokens": jnp.asarray(tokens)[None],
+                 "positions": jnp.asarray(pos)[None],
+                 "bits": jnp.asarray(bits)[None]}
+        logits, self.cache = self._prefill_fn(
+            self.params, cache=self.cache, batch=batch,
+            page=jnp.asarray(page), slot=jnp.asarray(slot))
+        r.next_idx = Tp
+        r.next_pos = T
+        self._emit(r, int(jnp.argmax(logits[0, last_row])))
+
+    def _emit(self, r: Request, token: int) -> None:
+        r.generated.append(token)
+        if (r.eos_id is not None and token == r.eos_id) or \
+                len(r.generated) >= r.max_new_tokens:
+            r.done = True
+
+    def _retire(self, rid: int) -> None:
+        pages = np.asarray(self.table.pages_of(rid), np.int32)
+        self.table.free(rid)
+        # device-side scrub: the kernel masks from cache["bits"]/"pos",
+        # so a reused page must not carry the old request's metadata
+        self.cache["bits"] = self.cache["bits"].at[pages].set(0)
+        self.cache["pos"] = self.cache["pos"].at[pages].set(-1)
+        self.rows[self.rows.index(rid)] = None
+
+    # -- decode ------------------------------------------------------------
+
+    def _decode_batch(self):
+        """Batch arrays for one decode tick over the current rows. Each
+        occupied row inserts its pending token (the last generated one)
+        at its next logical index; empty rows point at the null page
+        with bits=0 (mask out everywhere, write nothing visible)."""
+        B = self.max_batch
+        tokens = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        qbits = np.zeros(B, np.uint32)
+        page = np.full(B, NULL_PAGE, np.int32)
+        slot = np.zeros(B, np.int32)
+        for i, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            r = self.requests[rid]
+            tokens[i] = r.generated[-1]
+            pos[i] = r.next_pos
+            qbits[i] = r.gen_bits
+            self.table.write(r.rid, [r.next_idx], [r.gen_bits],
+                             [r.next_pos])
+            p, s = self.table.coords(r.rid, [r.next_idx])
+            page[i], slot[i] = p[0], s[0]
+        batch = {"tokens": jnp.asarray(tokens)[:, None],
+                 "positions": jnp.asarray(pos)[:, None],
+                 "bits": jnp.asarray(qbits)[:, None],
+                 "page": jnp.asarray(page), "slot": jnp.asarray(slot)}
+        if self.attn == "xla":
+            mp = max([1] + [len(self.table.pages_of(rid))
+                            for rid in self.rows if rid is not None])
+            mp = decode_grid_bucket(mp, granule=4)
+            pt = np.stack([
+                self.table.page_table_row(rid, mp) if rid is not None
+                else np.full(mp, NULL_PAGE, np.int32)
+                for rid in self.rows])
+            batch["page_tables"] = jnp.asarray(pt)
+        else:
+            # bucket by the dense page count so the step-array length
+            # (a static shape) stays put while requests grow
+            bound = sum(len(self.table.pages_of(rid)) if rid is not None
+                        else 1 for rid in self.rows)
+            grid = build_decode_grid(
+                self.table, self.rows, qbits, pos,
+                window=self.grid_window,
+                pad_to=decode_grid_bucket(max(bound, 1)))
+            self.last_grid = grid
+            batch["steps"] = tuple(jnp.asarray(a) for a in grid.arrays())
+        return batch
+
+    def step(self) -> Dict[int, int]:
+        """One scheduler tick. Returns {rid: token} emitted this tick
+        (admitted requests stream their first token from prefill)."""
+        out: Dict[int, int] = {}
+        for rid in self._admit():
+            r = self.requests[rid]
+            self._prefill(r)
+            out[rid] = r.generated[-1]
+            if r.done:
+                self._retire(rid)
+        if not any(rid is not None for rid in self.rows):
+            return out
+        batch = self._decode_batch()
+        logits, self.cache = self._decode_fn(
+            self.params, cache=self.cache, batch=batch)
+        next_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            r = self.requests[rid]
+            r.next_idx += 1
+            r.next_pos += 1
+            self._emit(r, int(next_tok[i]))
+            out[rid] = r.generated[-1]
+            if r.done:
+                self._retire(rid)
+        return out
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or \
+            any(rid is not None for rid in self.rows)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        """Drive ``step()`` until every submitted request completes;
+        returns {rid: generated tokens}."""
+        ticks = 0
+        while self.pending:
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError(
+                    f"engine did not drain within {max_ticks} ticks "
+                    f"(queue={len(self.queue)}, rows={self.rows})")
+            self.step()
+        return {rid: list(r.generated)
+                for rid, r in self.requests.items()}

@@ -52,7 +52,7 @@ B, T_ = 2, 16
 pos = jnp.broadcast_to(jnp.arange(T_, dtype=jnp.int32)[None], (B, T_))
 batch = {"positions": pos}
 def stage_fn(lp, x):
-    out, _ = T._block(cfg, lp, x, batch, jnp.int32(0), None)
+    out, _, _ = T._block(cfg, lp, x, batch, jnp.int32(0), None)
     return out
 mbs = jax.random.normal(jax.random.fold_in(key, 7), (4, B, T_, cfg.d_model))
 out = mp.pipeline_forward(mesh, "stage", stage_fn, sp, mbs, num_stages=4)
