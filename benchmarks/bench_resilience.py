@@ -1,0 +1,108 @@
+"""Resilience runtime cost: monitor overhead per step + checkpoint I/O.
+
+Three questions, one row each (mirrored into ``BENCH_resilience.json``):
+
+  * ``resil/step-plain`` vs ``resil/step-guarded`` — the same LM train
+    step with and without the in-jit health gate
+    (``make_resilient_train_step``: NaN/Inf flags, global grad norm,
+    EMA loss-spike score, gated update, fused f32 bundle). The guarded
+    row's derived field is the overhead in percent — the price of
+    never letting a NaN touch params. It should be a few percent: the
+    bundle is one tiny stacked vector and the gate is a tree of
+    ``jnp.where`` selects XLA fuses into the update.
+  * ``resil/ckpt-save`` — ``CheckpointManager.save`` of a full
+    {params, optimizer, health} state tree (atomic temp-dir+rename,
+    per-shard crc32), derived = MB/s to disk.
+  * ``resil/ckpt-restore`` — ``CheckpointManager.restore`` of the same
+    tree with checksum verification on, derived = MB/s back.
+"""
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import TextLMDataset
+from repro.models import api
+from repro.optim import optimizer as opt
+from repro.resilience import (CheckpointManager, default_controls,
+                              init_health, make_resilient_train_step)
+from repro.training import steps
+
+from .common import emit, timeit
+
+RESIL_JSON = os.environ.get("BENCH_RESIL_JSON", "BENCH_resilience.json")
+
+
+def _cfg(smoke: bool) -> ModelConfig:
+    if smoke:
+        return ModelConfig(name="resil-smoke", family="dense",
+                           num_layers=2, d_model=32, num_heads=4,
+                           num_kv_heads=2, d_ff=64, vocab_size=64,
+                           dtype="float32", remat=False,
+                           seq_shard_activations=False, attn_softcap=10.0)
+    return ModelConfig(name="resil-bench", family="dense", num_layers=4,
+                       d_model=256, num_heads=8, num_kv_heads=2,
+                       d_ff=512, vocab_size=512, dtype="float32",
+                       remat=False, seq_shard_activations=False,
+                       attn_softcap=10.0)
+
+
+def run(smoke: bool = False):
+    cfg = _cfg(smoke)
+    seq, batch = (16, 2) if smoke else (64, 4)
+    iters = 3 if smoke else 10
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig(warmup_steps=0, schedule="constant")
+    state = opt.init(ocfg, params)
+    batch_data = next(iter(TextLMDataset(cfg.vocab_size, seq, batch,
+                                         seed=0)))
+    if os.path.exists(RESIL_JSON):
+        os.remove(RESIL_JSON)
+
+    # -- monitor overhead: plain step vs guarded step (no donation so
+    # -- the same buffers can be timed repeatedly)
+    plain = jax.jit(steps.make_train_step(cfg, ocfg))
+    guarded = jax.jit(make_resilient_train_step(
+        steps.make_loss_fn(cfg), ocfg))
+    health, controls = init_health(), default_controls()
+    us_plain = timeit(plain, params, state, batch_data, iters=iters)
+    us_guard = timeit(guarded, params, state, health, batch_data,
+                      controls, iters=iters)
+    over = 100.0 * (us_guard - us_plain) / us_plain
+    emit("resil/step-plain", us_plain, "baseline",
+         json_path=RESIL_JSON)
+    emit("resil/step-guarded", us_guard, f"overhead_pct={over:.1f}",
+         json_path=RESIL_JSON, overhead_pct=round(over, 1))
+
+    # -- checkpoint save / restore latency over the full state tree
+    tree = {"params": params, "opt": state, "health": health}
+    nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+    mb = nbytes / 1e6
+    root = tempfile.mkdtemp(prefix="bench_resil_")
+    try:
+        mgr = CheckpointManager(root, keep=2)
+        t0 = time.perf_counter()
+        for i in range(iters):
+            mgr.save(i, tree, meta={"cursor": i})
+        save_us = (time.perf_counter() - t0) * 1e6 / iters
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            mgr.restore(tree)                  # crc32-verified load
+        load_us = (time.perf_counter() - t0) * 1e6 / iters
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    emit("resil/ckpt-save", save_us,
+         f"mb_per_s={mb / (save_us / 1e6):.1f}", json_path=RESIL_JSON,
+         mbytes=round(mb, 2), mb_per_s=round(mb / (save_us / 1e6), 1))
+    emit("resil/ckpt-restore", load_us,
+         f"mb_per_s={mb / (load_us / 1e6):.1f}", json_path=RESIL_JSON,
+         mbytes=round(mb, 2), mb_per_s=round(mb / (load_us / 1e6), 1))
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   serve     — paged-cache serving throughput: tokens/sec vs batch
               size, xla gather vs paged flash-decode kernel, plus
               the multimodal page-skip fraction
+  resil     — fault-tolerance runtime cost: in-jit health-monitor
+              overhead per train step (guarded vs plain), atomic
+              checkpoint save/restore MB/s
 
 ``--smoke`` shrinks every benchmark to a tiny grid with one repeat —
 seconds, not minutes — so CI can execute all of them on every push and
@@ -61,6 +64,9 @@ def main() -> None:
     if on("serve"):
         from benchmarks import bench_serve
         bench_serve.run(smoke=smoke)
+    if on("resil"):
+        from benchmarks import bench_resilience
+        bench_resilience.run(smoke=smoke)
 
 
 if __name__ == '__main__':

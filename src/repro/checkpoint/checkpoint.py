@@ -1,22 +1,41 @@
 """Sharded checkpointing: pytree -> (manifest.msgpack + *.npy shards).
 
 Layout:
-    <dir>/manifest.msgpack   — treedef paths, shapes, dtypes, step
+    <dir>/manifest.msgpack   — treedef paths, shapes, dtypes, crc32s,
+                               step + free-form ``meta`` dict
     <dir>/arr_<i>.npy        — one file per leaf (memory-mapped on load)
 
 Works for params + optimizer state; frozen modules are saved once and
-skipped on subsequent saves when ``skip_frozen`` (they never change —
-the Cornstarch frozen-status optimization applied to checkpoint I/O).
+skipped on subsequent saves when ``frozen_paths`` is given (they never
+change — the Cornstarch frozen-status optimization applied to
+checkpoint I/O). ``prev_dir`` lets the reuse span *directories*: the
+resilience ``CheckpointManager`` keeps each step in its own dir, and a
+frozen shard is hardlinked (copied as a fallback) from the previous
+step's dir instead of being re-serialized.
+
+Every shard carries a crc32 in the manifest; ``load`` verifies them by
+default and raises :class:`CheckpointError` naming the offending shard
+— a corrupted file is detected at load time, never silently trained
+on. All validation errors are real exceptions (``CheckpointError``, a
+``ValueError``), not asserts, so they survive ``python -O``.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+import shutil
+import zlib
+from typing import Any, Callable, Optional
 
 import msgpack
 import numpy as np
 
 import jax
+
+
+class CheckpointError(ValueError):
+    """A checkpoint failed validation: missing/truncated manifest,
+    missing shard, shape mismatch, or checksum failure. The message
+    always names the checkpoint dir and the offending path/file."""
 
 
 def _paths_and_leaves(tree):
@@ -35,9 +54,22 @@ def _paths_and_leaves(tree):
     return out
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save(ckpt_dir: str, tree, *, step: int = 0,
          frozen_paths: Optional[set] = None,
-         prev_manifest: Optional[dict] = None) -> dict:
+         prev_manifest: Optional[dict] = None,
+         prev_dir: Optional[str] = None,
+         meta: Optional[dict] = None,
+         on_entry: Optional[Callable[[int, str], None]] = None) -> dict:
+    """Write ``tree`` under ``ckpt_dir``; returns the manifest.
+
+    ``on_entry(i, path)`` fires after shard ``i`` hits disk — the
+    fault-injection hook the crash-safety tests use to kill a save
+    mid-flight (see ``repro.resilience.faults``).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     entries = []
     for i, (path, leaf) in enumerate(_paths_and_leaves(tree)):
@@ -46,37 +78,106 @@ def save(ckpt_dir: str, tree, *, step: int = 0,
         if frozen_paths and prev_manifest and \
                 any(path.startswith(fp) for fp in frozen_paths):
             prev = {e["path"]: e for e in prev_manifest["entries"]}
-            if path in prev and os.path.exists(
-                    os.path.join(ckpt_dir, prev[path]["file"])):
-                entries.append(prev[path])
-                continue
+            if path in prev:
+                src = os.path.join(ckpt_dir, prev[path]["file"])
+                if os.path.exists(src):
+                    entries.append(prev[path])
+                    continue
+                if prev_dir is not None:
+                    src = os.path.join(prev_dir, prev[path]["file"])
+                    if os.path.exists(src):
+                        dst = os.path.join(ckpt_dir, prev[path]["file"])
+                        try:
+                            os.link(src, dst)
+                        except OSError:
+                            shutil.copyfile(src, dst)
+                        entries.append(prev[path])
+                        continue
         np.save(os.path.join(ckpt_dir, fname), arr)
         entries.append({"path": path, "file": fname,
-                        "shape": list(arr.shape), "dtype": str(arr.dtype)})
-    manifest = {"step": step, "entries": entries}
-    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "wb") as f:
+                        "shape": list(arr.shape), "dtype": str(arr.dtype),
+                        "crc32": _crc(arr)})
+        if on_entry is not None:
+            on_entry(i, path)
+    manifest = {"step": step, "entries": entries, "meta": meta or {}}
+    tmp = os.path.join(ckpt_dir, "manifest.msgpack.tmp")
+    with open(tmp, "wb") as f:
         f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(ckpt_dir, "manifest.msgpack"))
     return manifest
 
 
-def load(ckpt_dir: str, like=None):
+def read_manifest(ckpt_dir: str) -> dict:
+    """Parse ``<dir>/manifest.msgpack`` or raise :class:`CheckpointError`
+    (missing file, truncated/garbled msgpack) with a clear message."""
+    mpath = os.path.join(ckpt_dir, "manifest.msgpack")
+    if not os.path.exists(mpath):
+        raise CheckpointError(
+            f"no checkpoint at {ckpt_dir!r}: manifest.msgpack is missing")
+    try:
+        with open(mpath, "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+    except Exception as e:  # truncated write, garbage bytes, ...
+        raise CheckpointError(
+            f"checkpoint manifest at {mpath!r} is corrupt or truncated: "
+            f"{type(e).__name__}: {e}") from None
+    if not isinstance(manifest, dict) or "entries" not in manifest:
+        raise CheckpointError(
+            f"checkpoint manifest at {mpath!r} has no 'entries' record "
+            f"(got {type(manifest).__name__})")
+    return manifest
+
+
+def load(ckpt_dir: str, like=None, *, verify: bool = True):
     """Returns (tree, step). If ``like`` is given, restores exactly that
-    structure (validating shapes); otherwise returns {path: array}."""
-    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    structure (validating shapes); otherwise returns {path: array}.
+    ``verify=True`` (default) checks every shard's crc32 against the
+    manifest and raises :class:`CheckpointError` naming the shard on
+    mismatch (manifests written before checksums existed skip the
+    check for entries without a ``crc32`` field)."""
+    manifest = read_manifest(ckpt_dir)
     arrays = {}
     for e in manifest["entries"]:
-        arr = np.load(os.path.join(ckpt_dir, e["file"]), mmap_mode="r")
-        assert list(arr.shape) == e["shape"], (e["path"], arr.shape)
+        fpath = os.path.join(ckpt_dir, e["file"])
+        if not os.path.exists(fpath):
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r}: shard {e['file']!r} for "
+                f"path {e['path']!r} is missing")
+        try:
+            arr = np.load(fpath, mmap_mode=None if verify else "r")
+        except Exception as err:
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r}: shard {e['file']!r} for "
+                f"path {e['path']!r} is unreadable: "
+                f"{type(err).__name__}: {err}") from None
+        if list(arr.shape) != list(e["shape"]):
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r}: path {e['path']!r} has shape "
+                f"{list(arr.shape)} on disk but the manifest says "
+                f"{list(e['shape'])}")
+        if verify and e.get("crc32") is not None and _crc(arr) != e["crc32"]:
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r}: shard {e['file']!r} for path "
+                f"{e['path']!r} failed its crc32 checksum — the file is "
+                f"corrupt; restore from an older checkpoint")
         arrays[e["path"]] = arr
     if like is None:
         return arrays, manifest["step"]
     flat = _paths_and_leaves(like)
     leaves = []
     for path, leaf in flat:
-        assert path in arrays, f"missing {path} in checkpoint"
+        if path not in arrays:
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r} is missing path {path!r} "
+                f"required by the restore target structure")
         a = np.asarray(arrays[path])
-        assert a.shape == tuple(leaf.shape), (path, a.shape, leaf.shape)
+        if a.shape != tuple(leaf.shape):
+            raise CheckpointError(
+                f"checkpoint {ckpt_dir!r}: path {path!r} has shape "
+                f"{tuple(a.shape)} but the restore target expects "
+                f"{tuple(leaf.shape)}")
         leaves.append(a.astype(leaf.dtype) if hasattr(leaf, "dtype") else a)
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
         --steps 300 --seq 128 --batch 4 [--reduced] [--mllm valm] \
-        [--ckpt-dir ckpts/run0] [--log-every 10]
+        [--ckpt-dir ckpts/run0] [--ckpt-every 50] [--resume] \
+        [--fault-plan faults.json] [--log-every 10]
 
 Two modes:
   * LM mode (``--arch``): any registered architecture; synthetic LM
@@ -15,20 +16,29 @@ Two modes:
     let the driver search one (``--plan-devices`` / ``--cp-size`` /
     ``--microbatches``) and persist it with ``--plan-out``.
 
+Both modes run under the fault-tolerant runtime (repro.resilience):
+the train step is health-guarded (NaN/Inf and grad-norm gated in-jit,
+EMA loss-spike scored), verdicts and faults land in
+``<ckpt-dir>/events.jsonl``, and ``--ckpt-dir`` names a
+``CheckpointManager`` root of atomic ``step_XXXXXXXX`` checkpoints
+bundling params + optimizer + health EMA + data cursor in one
+manifest. ``--resume`` restarts from ``latest()`` bit-exactly — an
+interrupted-and-resumed run logs the same losses as an uninterrupted
+one (asserted in tests/test_resilience.py). ``--fault-plan`` replays a
+deterministic ``FaultPlan`` JSON (NaN grads, crash, kill-mid-save,
+device loss) against the run — the chaos-testing entry point.
+
 Runs on whatever devices exist (data-parallel over the host mesh when
 more than one); this is the driver the smoke/e2e examples call into.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import numpy as np
-
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import get_config
 from repro.data.synthetic import MultimodalDataset, TextLMDataset
 from repro.models import api
@@ -36,36 +46,78 @@ from repro.optim import optimizer as opt
 from repro.training import steps
 
 
+def _run_resilient(args, loss_fn, params, ocfg, *, frozen_mask=None,
+                   ds_factory, frozen_ckpt_paths=None,
+                   on_device_loss=None, meta=None) -> dict:
+    """The shared fault-tolerant loop both modes run: guarded step,
+    monitor + JSONL events, atomic checkpoints, rollback/resume."""
+    from repro.resilience import (CheckpointManager, CursorStream,
+                                  EventLog, FaultInjector, FaultPlan,
+                                  HealthMonitor, MonitorConfig,
+                                  ResilientTrainer,
+                                  make_resilient_train_step)
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir")
+    state = opt.init(ocfg, params, frozen_mask)
+    step_fn = jax.jit(
+        make_resilient_train_step(loss_fn, ocfg, frozen_mask),
+        donate_argnums=(0, 1, 2))
+    manager = log_path = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, keep=args.keep,
+                                    frozen_paths=frozen_ckpt_paths)
+        log_path = os.path.join(args.ckpt_dir, "events.jsonl")
+    monitor = HealthMonitor(
+        MonitorConfig(spike_sigma=args.spike_sigma), EventLog(log_path))
+    injector = None
+    if args.fault_plan:
+        injector = FaultInjector(FaultPlan.load(args.fault_plan))
+        print(f"fault plan armed: {len(injector.plan.faults)} fault(s) "
+              f"from {args.fault_plan}")
+    trainer = ResilientTrainer(
+        step_fn, params, state, CursorStream(ds_factory),
+        monitor=monitor, manager=manager, injector=injector,
+        ckpt_every=args.ckpt_every, resume=args.resume,
+        meta={"seed": args.seed, **(meta or {})},
+        on_device_loss=on_device_loss, log_every=args.log_every)
+    if args.resume and trainer.step:
+        print(f"resumed from {manager.latest()} at step {trainer.step}")
+    t0 = time.time()
+    res = trainer.run(args.steps)
+    took = time.time() - t0
+    if manager is not None:
+        trainer.save_checkpoint()
+        print(f"saved checkpoint to {manager.latest()}")
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    losses = [v for _, v in sorted(res["losses"].items())]
+    if res["rollbacks"] or res["skipped"]:
+        print(f"resilience: {res['skipped']} skipped step(s), "
+              f"{res['rollbacks']} rollback(s), "
+              f"{len(res['fired_faults'])} fault(s) fired")
+    done = max(len(losses), 1)
+    print(f"trained {len(losses)} step(s) in {took:.1f}s "
+          f"({took / done:.2f}s/step)")
+    return {"params": n_params, "first_loss": losses[0],
+            "last_loss": losses[-1], "losses": losses,
+            "resilience": res}
+
+
 def train_lm(args) -> dict:
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.vocab:
         cfg = cfg.replace(vocab_size=args.vocab)
     params = api.init(jax.random.PRNGKey(args.seed), cfg)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
     ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
                                                         or 1),
                            total_steps=args.steps)
-    state = opt.init(ocfg, params)
-    step_fn = jax.jit(steps.make_train_step(cfg, ocfg), donate_argnums=(0, 1))
-    ds = iter(TextLMDataset(cfg.vocab_size, args.seq, args.batch,
-                            seed=args.seed))
-    losses = []
-    t0 = time.time()
-    for i, batch in zip(range(args.steps), ds):
-        params, state, m = step_fn(params, state, batch)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            loss = float(m["loss"])
-            losses.append(loss)
-            print(f"step {i:5d} loss {loss:.4f} "
-                  f"gnorm {float(m['grad_norm']):.3f} "
-                  f"lr {float(m['lr']):.2e} "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
-    if args.ckpt_dir:
-        ckpt.save(args.ckpt_dir, {"params": params, "opt": state},
-                  step=args.steps)
-        print(f"saved checkpoint to {args.ckpt_dir}")
-    return {"params": n_params, "first_loss": losses[0],
-            "last_loss": losses[-1], "losses": losses}
+
+    def ds_factory():
+        return TextLMDataset(cfg.vocab_size, args.seq, args.batch,
+                             seed=args.seed)
+
+    return _run_resilient(args, steps.make_loss_fn(cfg), params, ocfg,
+                          ds_factory=ds_factory,
+                          meta={"arch": args.arch})
 
 
 def resolve_plan(mllm, args):
@@ -114,6 +166,29 @@ def resolve_plan(mllm, args):
     return plan, executor
 
 
+def shrink_plan(mllm, plan, lost: int, args):
+    """Graceful degradation on device loss: re-run ``parallelize()``
+    over the shrunken ``ClusterSpec`` and return the degraded plan the
+    run continues under (Cornstarch's planner answers the same
+    question, just for fewer devices)."""
+    from repro.parallel import ClusterSpec, WorkloadShape, parallelize
+    # an MLLM plan needs at least one LLM stage plus one stage per
+    # encoder; losses below that floor can't be re-planned away
+    floor = 1 + len(mllm.encoders)
+    devices = max(floor, plan.pp_devices - lost)
+    block = min(128, max(8, mllm.merged_length(args.seq)
+                         // (2 * max(plan.cp_ranks, 1))))
+    degraded = parallelize(
+        mllm, ClusterSpec(num_devices=devices, cp_size=plan.cp_ranks),
+        WorkloadShape(text_len=args.seq,
+                      num_microbatches=args.microbatches,
+                      microbatch_size=args.batch, block_size=block))
+    print(f"device loss: re-planned {plan.pp_devices} -> "
+          f"{degraded.pp_devices} pipeline devices "
+          f"(bubble {degraded.schedule.bubble_fraction:.3f})")
+    return degraded
+
+
 def train_mllm(args) -> dict:
     from repro.models.mllm import build_paper_mllm
     mllm = build_paper_mllm(args.mllm, reduced=args.reduced,
@@ -150,39 +225,40 @@ def train_mllm(args) -> dict:
                 "spmd executor diverged from the sequential replay on "
                 f"this plan: {rep}")
     params = mllm.init(jax.random.PRNGKey(args.seed))
-    n_params = sum(x.size for x in jax.tree.leaves(params))
     ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
                                                         or 1),
                            total_steps=args.steps)
-    fmask = mllm.frozen_mask(params)
-    state = opt.init(ocfg, params, fmask)
-    step_fn, _ = steps.make_mllm_train_step(mllm, ocfg)
-    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-    ds = iter(MultimodalDataset(
-        vocab_size=mllm.llm_cfg.vocab_size, text_len=args.seq,
-        batch_size=args.batch,
-        encoder_dims={n: e.cfg.d_model for n, e in mllm.encoders.items()},
-        encoder_tokens={n: e.num_tokens for n, e in mllm.encoders.items()},
-        modality_ids={n: e.modality_id for n, e in mllm.encoders.items()},
-        seed=args.seed))
-    losses = []
-    t0 = time.time()
-    for i, batch in zip(range(args.steps), ds):
-        params, state, m = step_fn(params, state, batch)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            loss = float(m["loss"])
-            losses.append(loss)
-            print(f"step {i:5d} loss {loss:.4f} "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
-    if args.ckpt_dir:
-        frozen_paths = {f"encoders/{n}/module" for n in mllm.encoders}
-        if not args.train_llm:
-            frozen_paths.add("llm")
-        ckpt.save(args.ckpt_dir, params, step=args.steps)
-        print(f"saved checkpoint to {args.ckpt_dir} "
-              f"(frozen paths: {sorted(frozen_paths)})")
-    return {"params": n_params, "first_loss": losses[0],
-            "last_loss": losses[-1], "losses": losses}
+    frozen_mask = mllm.frozen_mask(params)
+    _, loss_fn = steps.make_mllm_train_step(mllm, ocfg)
+
+    def ds_factory():
+        return MultimodalDataset(
+            vocab_size=mllm.llm_cfg.vocab_size, text_len=args.seq,
+            batch_size=args.batch,
+            encoder_dims={n: e.cfg.d_model
+                          for n, e in mllm.encoders.items()},
+            encoder_tokens={n: e.num_tokens
+                            for n, e in mllm.encoders.items()},
+            modality_ids={n: e.modality_id
+                          for n, e in mllm.encoders.items()},
+            seed=args.seed)
+
+    # frozen modules' shards are written once and hardlinked forward by
+    # the CheckpointManager (checkpoint-I/O face of frozen awareness)
+    frozen_ckpt_paths = {f"params/encoders/{n}/module"
+                         for n in mllm.encoders}
+    if not args.train_llm:
+        frozen_ckpt_paths.add("params/llm")
+
+    def on_device_loss(lost: int) -> None:
+        shrink_plan(mllm, plan, lost, args)
+
+    return _run_resilient(args, loss_fn, params, ocfg,
+                          frozen_mask=frozen_mask, ds_factory=ds_factory,
+                          frozen_ckpt_paths=frozen_ckpt_paths,
+                          on_device_loss=on_device_loss,
+                          meta={"mllm": args.mllm,
+                                "plan": plan.to_json()})
 
 
 def main(argv=None):
@@ -197,8 +273,25 @@ def main(argv=None):
     ap.add_argument("--vocab", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    # fault tolerance (repro.resilience)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="CheckpointManager root (atomic step_XXXXXXXX "
+                    "checkpoints + events.jsonl)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in steps (0 = only the "
+                    "final checkpoint)")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoints retained under --ckpt-dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the newest checkpoint under "
+                    "--ckpt-dir (bit-exact continuation)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="FaultPlan JSON to inject deterministically "
+                    "(see repro.resilience.faults)")
+    ap.add_argument("--spike-sigma", type=float, default=8.0,
+                    help="EMA loss-spike z-score that triggers a "
+                    "rollback verdict")
     # MLLM-mode parallelization plan (repro.parallel typed API)
     ap.add_argument("--plan", default=None,
                     help="MLLMParallelPlan JSON to train under "
@@ -220,8 +313,8 @@ def main(argv=None):
     ap.add_argument("--train-llm", action="store_true",
                     help="MLLM mode: unfreeze the LLM (ft1 fine-tune)")
     args = ap.parse_args(argv)
-    assert (args.arch is None) != (args.mllm is None), \
-        "pass exactly one of --arch / --mllm"
+    if (args.arch is None) == (args.mllm is None):
+        raise SystemExit("pass exactly one of --arch / --mllm")
     res = train_mllm(args) if args.mllm else train_lm(args)
     print(f"done: {res['params']:,} params, "
           f"loss {res['first_loss']:.3f} -> {res['last_loss']:.3f}")

@@ -1,0 +1,39 @@
+"""Fault-tolerant training runtime (see docs/resilience.md).
+
+Three layers over the existing training stack:
+
+* health monitoring — ``make_resilient_train_step`` (in-jit NaN/Inf +
+  grad-norm + EMA loss-spike bundle, update gated on step health) and
+  ``HealthMonitor`` (host-side ``ok|skip|rollback|abort`` classifier
+  with a JSONL ``EventLog``);
+* atomic resumable checkpointing — ``CheckpointManager``
+  (write-to-temp-then-rename, per-shard crc32, retention, one manifest
+  bundling params + optimizer + EMA state + data cursor + free-form
+  meta, ``latest()`` discovery);
+* rollback-and-retry — ``ResilientTrainer`` + ``RetryPolicy`` +
+  ``CursorStream``, with the deterministic fault-injection harness
+  (``FaultPlan``/``FaultInjector``) that makes crash/rollback paths
+  assertable in tier-1 tests.
+"""
+from repro.resilience.faults import (FAULT_KINDS, CrashInjected,
+                                     DeviceLossInjected, Fault,
+                                     FaultInjector, FaultPlan,
+                                     corrupt_shard)
+from repro.resilience.manager import CheckpointManager
+from repro.resilience.monitor import (ABORT, BUNDLE_KEYS, OK, ROLLBACK,
+                                      SKIP, VERDICTS, EventLog,
+                                      HealthMonitor, MonitorConfig,
+                                      bundle_dict, default_controls,
+                                      init_health,
+                                      make_resilient_train_step)
+from repro.resilience.trainer import (CursorStream, ResilientTrainer,
+                                      RetryPolicy, TrainingAborted)
+
+__all__ = [
+    "ABORT", "BUNDLE_KEYS", "FAULT_KINDS", "OK", "ROLLBACK", "SKIP",
+    "VERDICTS", "CheckpointManager", "CrashInjected", "CursorStream",
+    "DeviceLossInjected", "EventLog", "Fault", "FaultInjector",
+    "FaultPlan", "HealthMonitor", "MonitorConfig", "ResilientTrainer",
+    "RetryPolicy", "TrainingAborted", "bundle_dict", "corrupt_shard",
+    "default_controls", "init_health", "make_resilient_train_step",
+]

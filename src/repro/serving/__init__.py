@@ -13,7 +13,8 @@ Three layers (see ``docs/serving.md``):
 * ``engine`` — ``ServingEngine``: request queue, admission control with
   upfront page budgets, prefill/decode interleaving, greedy streaming.
 """
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (InfeasibleRequest, Request,
+                                  ServingEngine)
 from repro.serving.model import (check_serving_cfg, grid_window,
                                  make_paged_decode_step, paged_decode_step,
                                  paged_prefill, prefill_forward,
@@ -24,7 +25,8 @@ from repro.serving.paged_cache import (NULL_PAGE, DecodeGrid, PageTable,
                                        init_paged_cache, plan_page_owners)
 
 __all__ = [
-    "NULL_PAGE", "DecodeGrid", "PageTable", "Request", "ServingEngine",
+    "NULL_PAGE", "DecodeGrid", "InfeasibleRequest", "PageTable",
+    "Request", "ServingEngine",
     "build_decode_grid", "check_serving_cfg", "decode_grid_bucket",
     "grid_window", "init_paged_cache", "make_paged_decode_step",
     "paged_decode_step", "paged_prefill", "plan_page_owners",

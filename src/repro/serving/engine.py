@@ -51,6 +51,30 @@ from repro.serving.paged_cache import (NULL_PAGE, PageTable,
 from functools import lru_cache
 
 
+class InfeasibleRequest(ValueError):
+    """Raised at ``submit`` time for a request whose page budget can
+    NEVER fit the pool, even with the engine otherwise empty — without
+    this check the request would sit at the head of the FIFO forever
+    (admission control only waits for pages to free up; an infeasible
+    budget never frees enough). Structured fields so callers can
+    degrade gracefully (shrink ``max_new_tokens``, chunk the prompt,
+    route to a bigger pool)."""
+
+    def __init__(self, *, prompt_len: int, max_new_tokens: int,
+                 needed_pages: int, capacity: int, page_size: int):
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.needed_pages = needed_pages
+        self.capacity = capacity
+        self.page_size = page_size
+        super().__init__(
+            f"request needs {needed_pages} pages (prompt {prompt_len} "
+            f"tokens + {max_new_tokens} new, page_size {page_size}) "
+            f"but the pool only has {capacity} allocatable pages — it "
+            f"can never be admitted; shrink the request or grow "
+            f"num_pages")
+
+
 @lru_cache(maxsize=None)
 def _jitted_steps(cfg, attn: str):
     """Engines with the same (frozen) cfg and attention path share one
@@ -127,6 +151,15 @@ class ServingEngine:
             raise ValueError(
                 f"request {rid}: bits length {len(r.bits)} != prompt "
                 f"length {len(r.tokens)}")
+        budget = self._page_budget(r)
+        capacity = self.table.num_pages - 1      # page 0 is the null page
+        if budget > capacity:
+            self._next_rid = rid                 # rid not consumed
+            raise InfeasibleRequest(
+                prompt_len=len(r.tokens),
+                max_new_tokens=r.max_new_tokens,
+                needed_pages=budget, capacity=capacity,
+                page_size=self.table.page_size)
         self.requests[rid] = r
         self.queue.append(rid)
         return rid

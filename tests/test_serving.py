@@ -321,3 +321,30 @@ def test_paged_cache_guards():
     cache = init_paged_cache(cfg, 4, 4)
     assert cache["k"].shape == (2, 4, 4, 2, 8)
     assert int(cache["bits"].sum()) == 0
+
+
+def test_submit_rejects_infeasible_page_budget():
+    """A request whose prompt+max_new page budget exceeds the whole
+    pool must be rejected AT SUBMIT with a structured error — not sit
+    at the head of the FIFO forever waiting for pages that can never
+    free up (the engine would spin to max_ticks)."""
+    from repro.serving import InfeasibleRequest
+    cfg = tiny_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, num_pages=4, page_size=4,
+                        max_batch=2)
+    # capacity = 3 pages (page 0 is the null page) = 12 tokens;
+    # 8 prompt tokens + 15 generated - 1 = 22 cached tokens -> 6 pages
+    with pytest.raises(InfeasibleRequest) as e:
+        eng.submit(np.arange(8) % cfg.vocab_size, max_new_tokens=15)
+    err = e.value
+    assert err.needed_pages == 6 and err.capacity == 3
+    assert err.prompt_len == 8 and err.max_new_tokens == 15
+    assert "never" in str(err)
+    # nothing was queued, no rid leaked, and the engine still serves
+    # feasible work afterwards
+    assert not eng.queue and not eng.requests
+    rid = eng.submit(np.arange(6) % cfg.vocab_size, max_new_tokens=4)
+    assert rid == 0
+    out = eng.run()
+    assert len(out[rid]) == 4
