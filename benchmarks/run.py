@@ -13,6 +13,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   spmd      — distributed shard_map executor vs sequential replay
               (multi-device subprocess; fails loudly on grad or
               peak divergence)
+  spmdtrain — real-MLLM SPMD train step (stage bundle through the
+              wave program) + rolled-vs-switch dispatch compile
+              scaling; writes BENCH_spmd_train.json
   serve     — paged-cache serving throughput: tokens/sec vs batch
               size, xla gather vs paged flash-decode kernel, plus
               the multimodal page-skip fraction
@@ -61,6 +64,9 @@ def main() -> None:
     if on("spmd"):
         from benchmarks import bench_spmd_executor
         bench_spmd_executor.run(smoke=smoke)
+    if on("spmdtrain"):
+        from benchmarks import bench_spmd_train
+        bench_spmd_train.run(smoke=smoke)
     if on("serve"):
         from benchmarks import bench_serve
         bench_serve.run(smoke=smoke)

@@ -187,10 +187,44 @@ class ModalityIslands:
 #    stage computations (the memory-validation target)
 # ---------------------------------------------------------------------------
 
-def execute_schedule(stage_fn: Callable, stage_params, microbatches,
+def _accepts_microbatch(fn: Callable) -> bool:
+    """Does ``fn`` implement the 3-arg StageFn contract
+    ``fn(stage_params, x, microbatch)``?  Legacy 2-arg stage fns
+    (``fn(stage_params, x)``) are still accepted everywhere."""
+    import inspect
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    params = list(sig.parameters.values())
+    if any(p.kind == p.VAR_POSITIONAL for p in params):
+        return True
+    pos = [p for p in params if p.kind in
+           (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return len(pos) >= 3
+
+
+def normalize_stage_fns(stage_fn, num_stages: int) -> List[Callable]:
+    """Normalize a stage-fn argument to a list of per-stage 3-arg
+    callables (``models.stages.StageBundle.stage_fns`` passes a list;
+    a single callable is replicated; 2-arg fns get the microbatch
+    argument dropped)."""
+    if isinstance(stage_fn, (list, tuple)):
+        fns = list(stage_fn)
+        if len(fns) != num_stages:
+            raise ValueError(
+                f"got {len(fns)} stage fns for {num_stages} stages")
+    else:
+        fns = [stage_fn] * num_stages
+    return [f if _accepts_microbatch(f)
+            else (lambda lp, x, mb, _f=f: _f(lp, x)) for f in fns]
+
+
+def execute_schedule(stage_fn, stage_params, microbatches,
                      graph, sim: Dict[str, Any], *,
                      microbatch_loss: Optional[Callable] = None,
-                     devices: Optional[Sequence[Any]] = None
+                     devices: Optional[Sequence[Any]] = None,
+                     trainable: Optional[Sequence[bool]] = None
                      ) -> Dict[str, Any]:
     """Execute a simulated schedule's work-item timeline with REAL
     stage computations, instrumenting live activations per device.
@@ -207,10 +241,18 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     order that violated data dependencies or freed an activation too
     early dies with a KeyError here rather than silently diverging.
 
-    Contracts (same as ``pipeline_forward``): ``stage_fn(lp, x) -> y``
-    with x/y of identical shape (the residual-stream contract);
-    ``stage_params`` stage-stacked with leading dim S; ``microbatches``
-    [M, ...]; ``graph`` any stage DAG in topological order — source
+    Contracts: ``stage_fn`` is one callable or a per-stage list, each
+    ``fn(lp, x, microbatch) -> y`` (legacy ``fn(lp, x)`` accepted) with
+    x/y of identical shape (the carrier contract — real MLLM stages
+    come from ``models.stages``); ``stage_params`` stage-stacked with
+    leading dim S, or a *list* of per-stage trees when stages are
+    heterogeneous (param_grads then comes back as a matching list);
+    ``trainable`` overrides which stages must produce weight grads —
+    default ``bwd_w > 0`` per stage, but a frozen stage holding a
+    trainable projector has no W cost in the schedule model yet still
+    needs its grads glued at B (the paper's §6 configuration);
+    ``microbatches`` [M, ...]; ``graph`` any stage DAG in topological
+    order — source
     stages read the microbatch, fan-in stages consume the SUM of their
     predecessors' outputs (the modality-parallel merge: every encoder
     chain feeds the first LLM stage), fan-out stages accumulate the
@@ -247,9 +289,16 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     D = int(sim["num_devices"])
     loss_fn = microbatch_loss or (lambda y: jnp.mean(y ** 2))
     has_w_items = any(kind == "W" for _, _, _, kind, _, _ in items)
+    fns = normalize_stage_fns(stage_fn, S)
+    hetero = isinstance(stage_params, (list, tuple))
+    if trainable is None:
+        trainable = [graph.stages[s].bwd_w > 0 for s in range(S)]
+    trainable = [bool(t) for t in trainable]
+    assert len(trainable) == S
 
     def rank_param(s):
-        lp = jax.tree.map(lambda a: a[s], stage_params)
+        lp = stage_params[s] if hetero \
+            else jax.tree.map(lambda a: a[s], stage_params)
         if devices is not None:
             lp = jax.device_put(lp, devices[device_of[s]])
         return lp
@@ -294,7 +343,7 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
             store[(s, m)] = x
             act_nbytes = max(act_nbytes, int(getattr(x, "nbytes", 0)))
             peak[dev] = max(peak[dev], store_count(dev))
-            y = stage_fn(params[s], x)
+            y = fns[s](params[s], x, microbatches[m])
             if not succs[s]:                     # sink: loss + cotangent
                 outputs[m] = y if outputs[m] is None \
                     else outputs[m] + y
@@ -308,29 +357,38 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
             # frozen stages with nothing trainable upstream (bwd_b = 0)
             # receive no cotangent — their B item only frees memory
             g = cot.pop((s, m), None)
-            assert g is not None or (st.bwd_b == 0 and st.bwd_w == 0), \
+            assert g is not None or (st.bwd_b == 0 and st.bwd_w == 0
+                                     and not trainable[s]), \
                 f"missing cotangent for B({s}, {m})"
             if st.bwd_b > 0 and preds[s]:
-                _, vjp_x = jax.vjp(lambda xx: stage_fn(params[s], xx), x)
+                _, vjp_x = jax.vjp(
+                    lambda xx: fns[s](params[s], xx, microbatches[m]), x)
                 (dx,) = vjp_x(g)
                 for p in preds[s]:
                     accumulate(cot, (p, m), dx)
-            if st.bwd_w > 0:
-                if has_w_items:              # deferred: park for W
+            if trainable[s]:
+                # park for a deferred W item only if the schedule
+                # emitted one (bwd_w > 0); a trainable stage the cost
+                # model sees as weight-free glues its grads here
+                if has_w_items and st.bwd_w > 0:
                     w_store[(s, m)] = (x, g)
                     w_peak[dev] = max(w_peak[dev], sum(
                         1 for (s_, _m) in w_store
                         if device_of[s_] == dev))
                 else:                        # glued: weight grads now
                     _, vjp_p = jax.vjp(
-                        lambda pp: stage_fn(pp, x), params[s])
+                        lambda pp: fns[s](pp, x, microbatches[m]),
+                        params[s])
                     (gp,) = vjp_p(g)
                     grads[s] = jax.tree.map(jnp.add, grads[s], gp)
         else:                                # W
-            x, g = w_store.pop((s, m))
-            _, vjp_p = jax.vjp(lambda pp: stage_fn(pp, x), params[s])
-            (gp,) = vjp_p(g)
-            grads[s] = jax.tree.map(jnp.add, grads[s], gp)
+            parked = w_store.pop((s, m), None)
+            if parked is not None:           # else: trainable=False
+                x, g = parked                # override — W is a no-op
+                _, vjp_p = jax.vjp(
+                    lambda pp: fns[s](pp, x, microbatches[m]), params[s])
+                (gp,) = vjp_p(g)
+                grads[s] = jax.tree.map(jnp.add, grads[s], gp)
         trace.append((item_id(item), dev, store_count(dev)))
 
     assert not store and not w_store and not transit, \
@@ -339,7 +397,8 @@ def execute_schedule(stage_fn: Callable, stage_params, microbatches,
     return {
         "outputs": jnp.stack(outputs),
         "loss": loss,
-        "param_grads": jax.tree.map(lambda *xs: jnp.stack(xs), *grads),
+        "param_grads": grads if hetero
+        else jax.tree.map(lambda *xs: jnp.stack(xs), *grads),
         "peak_activations_per_device": peak,
         "peak_w_residuals_per_device": w_peak,
         "activation_trace": trace,

@@ -14,7 +14,14 @@ Two modes:
     parallelization decision is a typed ``MLLMParallelPlan``
     (repro.parallel): load a cached one with ``--plan plan.json``, or
     let the driver search one (``--plan-devices`` / ``--cp-size`` /
-    ``--microbatches``) and persist it with ``--plan-out``.
+    ``--microbatches``) and persist it with ``--plan-out``. Adding
+    ``--spmd`` trains the SAME model distributed: the MLLM is
+    partitioned into per-stage callables (repro.models.stages), the
+    plan's wave/collective program is compiled and lint-gated, and
+    every train step replays it under ``shard_map`` across the
+    pipeline mesh. ``--resume`` works across modes — a replay-mode
+    checkpoint resumes an ``--spmd`` run and vice versa (params are
+    re-partitioned; optimizer moments reset).
 
 Both modes run under the fault-tolerant runtime (repro.resilience):
 the train step is health-guarded (NaN/Inf and grad-norm gated in-jit,
@@ -48,9 +55,20 @@ from repro.training import steps
 
 def _run_resilient(args, loss_fn, params, ocfg, *, frozen_mask=None,
                    ds_factory, frozen_ckpt_paths=None,
-                   on_device_loss=None, meta=None) -> dict:
+                   on_device_loss=None, meta=None,
+                   value_and_grad_fn=None,
+                   convert_checkpoint=None) -> dict:
     """The shared fault-tolerant loop both modes run: guarded step,
-    monitor + JSONL events, atomic checkpoints, rollback/resume."""
+    monitor + JSONL events, atomic checkpoints, rollback/resume.
+
+    ``value_and_grad_fn`` replaces the default autodiff sweep inside
+    the guarded step (the SPMD path computes grads by replaying the
+    schedule's B/W items). ``convert_checkpoint(manager, peek_meta) ->
+    (params, step, cursor)`` handles cross-mode resume: when the
+    newest checkpoint's ``meta["mode"]`` differs from this run's, the
+    converter loads it under the SOURCE layout and re-partitions the
+    params; optimizer moments and the health EMA are layout-bound and
+    restart fresh (``ResilientTrainer.adopt_state``)."""
     from repro.resilience import (CheckpointManager, CursorStream,
                                   EventLog, FaultInjector, FaultPlan,
                                   HealthMonitor, MonitorConfig,
@@ -60,7 +78,8 @@ def _run_resilient(args, loss_fn, params, ocfg, *, frozen_mask=None,
         raise SystemExit("--resume needs --ckpt-dir")
     state = opt.init(ocfg, params, frozen_mask)
     step_fn = jax.jit(
-        make_resilient_train_step(loss_fn, ocfg, frozen_mask),
+        make_resilient_train_step(loss_fn, ocfg, frozen_mask,
+                                  value_and_grad_fn=value_and_grad_fn),
         donate_argnums=(0, 1, 2))
     manager = log_path = None
     if args.ckpt_dir:
@@ -74,12 +93,29 @@ def _run_resilient(args, loss_fn, params, ocfg, *, frozen_mask=None,
         injector = FaultInjector(FaultPlan.load(args.fault_plan))
         print(f"fault plan armed: {len(injector.plan.faults)} fault(s) "
               f"from {args.fault_plan}")
+    resume, adopted, src_mode = args.resume, None, None
+    if args.resume and manager is not None \
+            and convert_checkpoint is not None:
+        peek = manager.peek_meta()
+        src_mode = peek.get("mode")
+        want = (meta or {}).get("mode")
+        if peek and src_mode and want and src_mode != want:
+            adopted = convert_checkpoint(manager, peek)
+            resume = False  # like-tree restore can't span layouts
     trainer = ResilientTrainer(
         step_fn, params, state, CursorStream(ds_factory),
         monitor=monitor, manager=manager, injector=injector,
-        ckpt_every=args.ckpt_every, resume=args.resume,
+        ckpt_every=args.ckpt_every, resume=resume,
         meta={"seed": args.seed, **(meta or {})},
         on_device_loss=on_device_loss, log_every=args.log_every)
+    if adopted is not None:
+        a_params, a_step, a_cursor = adopted
+        trainer.adopt_state(a_params,
+                            opt.init(ocfg, a_params, frozen_mask),
+                            step=a_step, cursor=a_cursor)
+        print(f"cross-mode resume: converted a {src_mode!r} checkpoint "
+              f"at step {a_step} into this run's layout (optimizer "
+              f"moments and health EMA reset)")
     if args.resume and trainer.step:
         print(f"resumed from {manager.latest()} at step {trainer.step}")
     t0 = time.time()
@@ -189,6 +225,105 @@ def shrink_plan(mllm, plan, lost: int, args):
     return degraded
 
 
+def _mllm_ds_factory(args, mllm):
+    """Shared multimodal stream factory — replay and SPMD modes must
+    consume the identical batch sequence (the loss-parity and
+    cross-mode-resume tests depend on it)."""
+    def ds_factory():
+        return MultimodalDataset(
+            vocab_size=mllm.llm_cfg.vocab_size, text_len=args.seq,
+            batch_size=args.batch,
+            encoder_dims={n: e.cfg.d_model
+                          for n, e in mllm.encoders.items()},
+            encoder_tokens={n: e.num_tokens
+                            for n, e in mllm.encoders.items()},
+            modality_ids={n: e.modality_id
+                          for n, e in mllm.encoders.items()},
+            seed=args.seed)
+    return ds_factory
+
+
+def _train_mllm_spmd(args, mllm, plan, executor) -> dict:
+    """Real-model distributed training: the plan's compiled wave
+    program drives the MLLM's own stage partition (``models.stages``)
+    through the ``shard_map`` runner every step — no toy stages
+    anywhere on this path. Loss and grads are the per-microbatch sums
+    rescaled by ``1/M``, which makes them numerically comparable to
+    (and tested against) the single-process ``make_mllm_train_step``.
+    """
+    import json
+
+    from repro.parallel.spmd import build_spmd_runner, mesh_from_plan
+    from repro.resilience.monitor import init_health
+
+    D = int(executor["schedule"]["num_devices"])
+    if len(jax.devices()) < D:
+        raise SystemExit(
+            f"--spmd needs {D} devices for this plan but the "
+            f"process has {len(jax.devices())}; relaunch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={D}")
+    bundle = executor["stage_bundle"]
+    M = int(plan.schedule.num_microbatches)
+    if args.batch % M != 0:
+        raise SystemExit(
+            f"--spmd needs --batch divisible by the plan's "
+            f"{M} microbatches, got --batch {args.batch}")
+    runner = build_spmd_runner(
+        bundle.stage_fns, executor["sim_graph"], executor["schedule"],
+        mesh=mesh_from_plan(plan, mllm, D),
+        microbatch_loss=bundle.microbatch_loss,
+        program=executor["spmd_program"],
+        trainable=list(bundle.trainable))
+
+    params = mllm.init(jax.random.PRNGKey(args.seed))
+    stage_params = bundle.partition(params)
+    frozen_mask = bundle.frozen_masks(stage_params)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
+                                                        or 1),
+                           total_steps=args.steps)
+    scale = 1.0 / M
+
+    def value_and_grad_fn(sp, batch):
+        # the schedule's B/W items ARE the backward pass — one jitted
+        # shard_map core per step instead of an autodiff sweep
+        mbs = bundle.encode_microbatches(batch, M)
+        _out, loss, grads_repr, _occ, _wocc = runner.core(
+            runner.prepare(sp), mbs, hetero=True)
+        grads = jax.tree.map(lambda g: g * scale,
+                             runner.finish_grads(grads_repr))
+        loss = loss * scale
+        return (loss, {"ce": loss}), grads
+
+    def convert_checkpoint(manager, peek):
+        # replay-mode checkpoint -> stage list: load under the
+        # whole-model layout, then partition per this plan's stages
+        like = {"params": params,
+                "opt": opt.init(ocfg, params, mllm.frozen_mask(params)),
+                "health": init_health()}
+        tree, step, src = manager.restore(like)
+        return (bundle.partition(tree["params"]),
+                int(src.get("step", step)),
+                int(src.get("cursor", src.get("step", step))))
+
+    def on_device_loss(lost: int) -> None:
+        shrink_plan(mllm, plan, lost, args)
+
+    # frozen-shard hardlinking keys on whole-model paths; stage-list
+    # checkpoints use per-stage paths, so skip the optimization here
+    return _run_resilient(args, None, stage_params, ocfg,
+                          frozen_mask=frozen_mask,
+                          ds_factory=_mllm_ds_factory(args, mllm),
+                          frozen_ckpt_paths=None,
+                          on_device_loss=on_device_loss,
+                          meta={"mllm": args.mllm,
+                                "plan": plan.to_json(),
+                                "mode": "spmd",
+                                "spmd_layout":
+                                    json.dumps(bundle.layout_meta)},
+                          value_and_grad_fn=value_and_grad_fn,
+                          convert_checkpoint=convert_checkpoint)
+
+
 def train_mllm(args) -> dict:
     from repro.models.mllm import build_paper_mllm
     mllm = build_paper_mllm(args.mllm, reduced=args.reduced,
@@ -203,45 +338,13 @@ def train_mllm(args) -> dict:
           f"simulated bubble "
           f"{executor['schedule']['bubble_fraction']:.3f}")
     if getattr(args, "spmd", False):
-        # prove the compiled shard_map program on THIS host's devices
-        # before any training step: distributed loss/grads must match
-        # the sequential replay (toy stages — the cheap parity oracle)
-        from repro.parallel.spmd import spmd_parity_report
-        D = int(executor["schedule"]["num_devices"])
-        if len(jax.devices()) < D:
-            raise SystemExit(
-                f"--spmd needs {D} devices for this plan but the "
-                f"process has {len(jax.devices())}; relaunch with "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={D}")
-        rep = spmd_parity_report(executor)
-        print(f"spmd executor: {rep['program']} "
-              f"loss {rep['loss_spmd']:.6f} vs replay "
-              f"{rep['loss_replay']:.6f}, max grad diff "
-              f"{rep['max_grad_diff']:.2e}, peaks_match="
-              f"{rep['peaks_match']}")
-        if not (rep["peaks_match"] and rep["trace_match"]
-                and rep["max_grad_diff"] < 1e-4):
-            raise SystemExit(
-                "spmd executor diverged from the sequential replay on "
-                f"this plan: {rep}")
+        return _train_mllm_spmd(args, mllm, plan, executor)
     params = mllm.init(jax.random.PRNGKey(args.seed))
     ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10
                                                         or 1),
                            total_steps=args.steps)
     frozen_mask = mllm.frozen_mask(params)
     _, loss_fn = steps.make_mllm_train_step(mllm, ocfg)
-
-    def ds_factory():
-        return MultimodalDataset(
-            vocab_size=mllm.llm_cfg.vocab_size, text_len=args.seq,
-            batch_size=args.batch,
-            encoder_dims={n: e.cfg.d_model
-                          for n, e in mllm.encoders.items()},
-            encoder_tokens={n: e.num_tokens
-                            for n, e in mllm.encoders.items()},
-            modality_ids={n: e.modality_id
-                          for n, e in mllm.encoders.items()},
-            seed=args.seed)
 
     # frozen modules' shards are written once and hardlinked forward by
     # the CheckpointManager (checkpoint-I/O face of frozen awareness)
@@ -250,15 +353,42 @@ def train_mllm(args) -> dict:
     if not args.train_llm:
         frozen_ckpt_paths.add("params/llm")
 
+    def convert_checkpoint(manager, peek):
+        # spmd-mode checkpoint -> whole-model tree: rebuild the stage
+        # layout the checkpoint was written under, load the stage list,
+        # and concatenate it back (models.stages.StageBundle round-trip)
+        import json
+
+        from repro.models.stages import build_mllm_stages
+        from repro.resilience.monitor import init_health
+        bundle = build_mllm_stages(mllm, executor, text_len=args.seq)
+        want = peek.get("spmd_layout")
+        if want and json.loads(want) != bundle.layout_meta:
+            raise SystemExit(
+                "the newest checkpoint was written under a different "
+                "SPMD stage layout than this plan resolves to; resume "
+                "with the plan that wrote it (--plan)")
+        sp0 = bundle.partition(params)
+        like = {"params": sp0,
+                "opt": opt.init(ocfg, sp0, bundle.frozen_masks(sp0)),
+                "health": init_health()}
+        tree, step, src = manager.restore(like)
+        return (bundle.unpartition(tree["params"]),
+                int(src.get("step", step)),
+                int(src.get("cursor", src.get("step", step))))
+
     def on_device_loss(lost: int) -> None:
         shrink_plan(mllm, plan, lost, args)
 
     return _run_resilient(args, loss_fn, params, ocfg,
-                          frozen_mask=frozen_mask, ds_factory=ds_factory,
+                          frozen_mask=frozen_mask,
+                          ds_factory=_mllm_ds_factory(args, mllm),
                           frozen_ckpt_paths=frozen_ckpt_paths,
                           on_device_loss=on_device_loss,
                           meta={"mllm": args.mllm,
-                                "plan": plan.to_json()})
+                                "plan": plan.to_json(),
+                                "mode": "replay"},
+                          convert_checkpoint=convert_checkpoint)
 
 
 def main(argv=None):
@@ -306,10 +436,11 @@ def main(argv=None):
     ap.add_argument("--no-lint", dest="lint", action="store_false",
                     help="skip the schedlint gate on the resolved plan")
     ap.add_argument("--spmd", action="store_true",
-                    help="MLLM mode: compile the plan's timeline to "
-                    "the shard_map executor, lint the emitted ppermute "
-                    "program, and verify distributed loss/grads "
-                    "against the sequential replay before training")
+                    help="MLLM mode: partition the model into pipeline "
+                    "stages, compile the plan's timeline to the "
+                    "shard_map executor (lint-gated), and train the "
+                    "real model distributed — every step replays the "
+                    "schedule's wave program across the device mesh")
     ap.add_argument("--train-llm", action="store_true",
                     help="MLLM mode: unfreeze the LLM (ft1 fine-tune)")
     args = ap.parse_args(argv)

@@ -341,7 +341,11 @@ class MLLMParallelPlan:
         (:func:`repro.parallel.spmd.compile_spmd_program`) and ships it
         under ``"spmd_program"`` — the artifact
         ``run_schedule_spmd`` executes and ``schedlint.
-        lint_spmd_program`` statically validates."""
+        lint_spmd_program`` statically validates — plus the real-model
+        stage partition under ``"stage_bundle"``
+        (:func:`repro.models.stages.build_mllm_stages`): typed
+        per-stage callables + params so ``launch/train --spmd`` trains
+        the actual MLLM, not a toy stand-in."""
         if mode not in ("replay", "spmd"):
             raise ValueError(
                 f"unknown executor mode {mode!r}; pick 'replay' "
@@ -363,9 +367,12 @@ class MLLMParallelPlan:
         out["plan"] = self
         out["context"] = self.context
         if mode == "spmd":
+            from repro.models.stages import build_mllm_stages
             from repro.parallel.spmd import compile_spmd_program
             out["spmd_program"] = compile_spmd_program(
                 out["sim_graph"], out["schedule"])
+            out["stage_bundle"] = build_mllm_stages(
+                mllm, out, text_len=text_len or self.text_len)
         return out
 
     # -- human-readable dump -----------------------------------------------

@@ -28,8 +28,14 @@ store with a boolean occupancy mask (the *measured* container, exactly
 like ``execute_schedule``'s dict store), an inbox accumulating fan-in
 partial sums, a cotangent accumulator for fan-out stages, W-residual
 slots for deferred weight-grad passes — and steps through the waves
-with one ``lax.switch`` over per-device branches per wave, so each
-device traces only its own stage computation. Loss and outputs are
+with a steady-state rolled loop: a ``lax.fori_loop`` over a compacted
+instruction table dispatching one ``lax.switch`` over *distinct*
+``(kind, stage)`` branches, so compile time scales with the number of
+distinct instructions rather than timeline length (the fully-unrolled
+``dispatch="switch"`` baseline is kept for comparison). Stage fns may
+be real-model per-stage callables (``models.stages.build_mllm_stages``
+— heterogeneous params travel as a replicated list with psum-reduced
+grads) or a single homogeneous callable. Loss and outputs are
 ``psum``-reduced over the pipeline axis; per-item occupancy is written
 into a trace buffer and reassembled host-side into the same
 ``activation_trace`` format ``execute_schedule`` returns, so
@@ -285,19 +291,90 @@ def _unstack_grads(program: SPMDProgram, grads_dl: Any) -> Any:
     return jax.tree.map(one, grads_dl)
 
 
-def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
+def _rolled_tables(prog: SPMDProgram):
+    """Compact the wave timeline into per-wave instruction tables.
+
+    Distinct instructions are ``(kind, stage)`` pairs — the device and
+    chunk are static per stage, the microbatch and item index are
+    traced table lookups — so the rolled dispatch loop traces each
+    stage branch ONCE regardless of timeline length."""
+    D, W = prog.num_devices, len(prog.waves)
+    keys: List[Tuple[str, int]] = []
+    key_of: Dict[Tuple[str, int], int] = {}
+    instr = np.zeros((W, D), np.int32)       # 0 = idle
+    m_tab = np.zeros((W, D), np.int32)
+    item_tab = np.zeros((W, D), np.int32)
+    for w, wave in enumerate(prog.waves):
+        for d, (i, kind, s, _c, m) in wave.compute.items():
+            k = (kind, s)
+            if k not in key_of:
+                key_of[k] = len(keys) + 1
+                keys.append(k)
+            instr[w, d] = key_of[k]
+            m_tab[w, d] = m
+            item_tab[w, d] = i
+    R = max((len(wv.rounds) for wv in prog.waves), default=0)
+    comm = None
+    if R:
+        on = np.zeros((W, R, D), bool)
+        src = np.zeros((W, R, D), np.int32)
+        c_tab = np.zeros((W, R, D), np.int32)
+        m2 = np.zeros((W, R, D), np.int32)
+        isb = np.zeros((W, R), bool)
+        for w, wave in enumerate(prog.waves):
+            for r, rnd in enumerate(wave.rounds):
+                isb[w, r] = rnd.kind == "bwd"
+                for t in rnd.transfers:
+                    on[w, r, t.dst_dev] = True
+                    src[w, r, t.dst_dev] = t.src_dev
+                    c_tab[w, r, t.dst_dev] = prog.chunk_of[t.dst_stage]
+                    m2[w, r, t.dst_dev] = t.microbatch
+        comm = (on, src, c_tab, m2, isb)
+    return keys, instr, m_tab, item_tab, R, comm
+
+
+def build_spmd_runner(stage_fn, graph: PipelineGraph,
                       sim: Dict[str, Any], *,
                       mesh: Optional[Mesh] = None,
                       axis_name: str = "pp",
                       microbatch_loss: Optional[Callable] = None,
                       program: Optional[SPMDProgram] = None,
-                      jit: bool = True) -> Callable:
+                      jit: bool = True,
+                      trainable: Optional[Sequence[bool]] = None,
+                      dispatch: str = "rolled") -> Callable:
     """Compile the schedule once and return
     ``runner(stage_params, microbatches) -> result dict`` with the same
     contract as ``execute_schedule`` (outputs, loss, param_grads,
     per-device peaks, activation_trace). The shard_map core is jitted
     (cached across calls) — this is what ``make_spmd_train_step``
-    builds per training run."""
+    builds per training run.
+
+    ``stage_fn`` follows ``execute_schedule``'s contract: one callable
+    or a per-stage list, 2-arg ``fn(lp, x)`` or 3-arg
+    ``fn(lp, x, microbatch)`` (``models.stages.StageBundle.stage_fns``).
+    ``stage_params`` may be stage-stacked (homogeneous stages, sharded
+    ``[D, L, ...]`` per device) or a list of per-stage trees
+    (heterogeneous real-model stages; replicated, grads psum-reduced —
+    ``param_grads`` then comes back as a matching list). ``trainable``
+    has ``execute_schedule``'s semantics (stages that must produce
+    weight grads even with ``bwd_w == 0``).
+
+    ``dispatch`` selects the wave-stepping strategy:
+
+    * ``"rolled"`` (default): a ``lax.fori_loop`` over waves indexing a
+      compacted instruction table, with one ``lax.switch`` over
+      *distinct* ``(kind, stage)`` branches and table-driven
+      ``all_gather`` comm rounds — compile time scales with distinct
+      instructions, not timeline length.
+    * ``"switch"``: the original fully-unrolled one-``lax.switch``-per-
+      wave program with per-round ``ppermute`` — retraces every wave;
+      kept as the compile-time baseline (see
+      ``benchmarks/bench_spmd_train.py``).
+
+    Both dispatch modes execute the exact same per-item updates in the
+    same order — identical loss, grads, occupancy trace, and peaks.
+    """
+    from repro.core.modality_parallel import normalize_stage_fns
     prog = program if program is not None else \
         compile_spmd_program(graph, sim)
     if mesh is None:
@@ -307,28 +384,52 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
             f"mesh axis {axis_name!r} has {mesh.shape[axis_name]} "
             f"devices but the program was compiled for "
             f"{prog.num_devices}")
+    if dispatch not in ("rolled", "switch"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     loss_fn = microbatch_loss or (lambda y: jnp.mean(y ** 2))
+    S = len(graph.stages)
     D, L = prog.num_devices, prog.max_chunks
     device_of, chunk_of = prog.device_of, prog.chunk_of
     preds, succs = graph.preds, graph.succs
     n_items = len(prog.items)
     has_w = prog.has_w_items
+    fns = normalize_stage_fns(stage_fn, S)
+    if trainable is None:
+        trainable = [graph.stages[s].bwd_w > 0 for s in range(S)]
+    trainable = [bool(t) for t in trainable]
+    for s in range(S):
+        # same reachability invariant compile_spmd_program checks for
+        # bwd-costed stages, extended to the trainable override: a
+        # trainable stage must receive a cotangent from somewhere
+        if trainable[s] and succs[s] and not any(
+                graph.stages[q].bwd_b > 0 for q in succs[s]):
+            raise ValueError(
+                f"stage {s} is trainable but no successor produces its "
+                f"cotangent (all succs have bwd_b == 0)")
 
-    def core(local_params, mbs):
+    def core(local_params, mbs, hetero=False):
         M = mbs.shape[0]
         xshape, xdtype = mbs.shape[1:], mbs.dtype
         loss_dtype = jax.eval_shape(
             loss_fn, jax.ShapeDtypeStruct(xshape, xdtype)).dtype
 
         def body(local_params, mbs):
-            lp = jax.tree.map(lambda a: a[0], local_params)  # [L, ...]
+            if hetero:
+                params_t = local_params          # tuple of stage trees
+            else:
+                lp = jax.tree.map(lambda a: a[0], local_params)  # [L,...]
             idx = lax.axis_index(axis_name)
+            if hetero:
+                zgrads = tuple(jax.tree.map(jnp.zeros_like, p)
+                               for p in params_t)
+            else:
+                zgrads = jax.tree.map(jnp.zeros_like, lp)
             state = {
                 "x": jnp.zeros((L, M) + xshape, xdtype),
                 "used": jnp.zeros((L, M), jnp.bool_),
                 "inbox": jnp.zeros((L, M) + xshape, xdtype),
                 "cot": jnp.zeros((L, M) + xshape, xdtype),
-                "grads": jax.tree.map(jnp.zeros_like, lp),
+                "grads": zgrads,
                 "loss": jnp.zeros((), loss_dtype),
                 "out": jnp.zeros((M,) + xshape, xdtype),
                 "fy": jnp.zeros(xshape, xdtype),
@@ -341,22 +442,38 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
                 state["wg"] = jnp.zeros((L, M) + xshape, xdtype)
                 state["wused"] = jnp.zeros((L, M), jnp.bool_)
 
-            def idle(st):
+            def idle(st, m, i):
                 return st
 
-            def make_branch(dev, instr):
-                i, kind, s, c, m = instr
+            def add_grads(st, s, c, gp):
+                if hetero:
+                    gl = list(st["grads"])
+                    gl[s] = jax.tree.map(jnp.add, gl[s], gp)
+                    st["grads"] = tuple(gl)
+                else:
+                    st["grads"] = jax.tree.map(
+                        lambda G, dG: G.at[c].add(dG), st["grads"], gp)
+                return st
+
+            def make_branch(kind, s):
+                # device/chunk are static per stage; the microbatch and
+                # item index are traced (rolled table lookups)
+                dev, c = device_of[s], chunk_of[s]
                 stg = graph.stages[s]
                 prs, sucs = preds[s], succs[s]
 
-                def br(st):
+                def br(st, m, i):
                     st = dict(st)
-                    lpc = jax.tree.map(lambda a: a[c], lp)
+                    if hetero:
+                        lpc = params_t[s]
+                    else:
+                        lpc = jax.tree.map(lambda a: a[c], lp)
+                    mb = mbs[m]
                     if kind == "F":
-                        x = st["inbox"][c, m] if prs else mbs[m]
+                        x = st["inbox"][c, m] if prs else mb
                         st["x"] = st["x"].at[c, m].set(x)
                         st["used"] = st["used"].at[c, m].set(True)
-                        y = stage_fn(lpc, x)
+                        y = fns[s](lpc, x, mb)
                         if not sucs:             # sink: loss + cotangent
                             st["out"] = st["out"].at[m].add(y)
                             st["loss"] = st["loss"] + loss_fn(y)
@@ -376,36 +493,36 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
                             jnp.zeros(xshape, xdtype))
                         if stg.bwd_b > 0 and prs:
                             _, vjp_x = jax.vjp(
-                                lambda xx: stage_fn(lpc, xx), x)
+                                lambda xx: fns[s](lpc, xx, mb), x)
                             (dx,) = vjp_x(g)
                             st["bg"] = dx
                             for p in prs:
                                 if device_of[p] == dev:
                                     st["cot"] = st["cot"].at[
                                         chunk_of[p], m].add(dx)
-                        if stg.bwd_w > 0:
-                            if has_w:            # deferred: park for W
+                        if trainable[s]:
+                            # park for a deferred W only if the schedule
+                            # emitted one; a trainable stage the cost
+                            # model sees as weight-free glues here
+                            if has_w and stg.bwd_w > 0:
                                 st["wx"] = st["wx"].at[c, m].set(x)
                                 st["wg"] = st["wg"].at[c, m].set(g)
                                 st["wused"] = st["wused"].at[
                                     c, m].set(True)
                             else:                # glued: weight grads now
                                 _, vjp_p = jax.vjp(
-                                    lambda pw: stage_fn(pw, x), lpc)
+                                    lambda pw: fns[s](pw, x, mb), lpc)
                                 (gp,) = vjp_p(g)
-                                st["grads"] = jax.tree.map(
-                                    lambda G, dG: G.at[c].add(dG),
-                                    st["grads"], gp)
+                                st = add_grads(st, s, c, gp)
                     else:                        # W
                         x = st["wx"][c, m]
                         g = st["wg"][c, m]
                         st["wused"] = st["wused"].at[c, m].set(False)
-                        _, vjp_p = jax.vjp(
-                            lambda pw: stage_fn(pw, x), lpc)
-                        (gp,) = vjp_p(g)
-                        st["grads"] = jax.tree.map(
-                            lambda G, dG: G.at[c].add(dG),
-                            st["grads"], gp)
+                        if trainable[s]:
+                            _, vjp_p = jax.vjp(
+                                lambda pw: fns[s](pw, x, mb), lpc)
+                            (gp,) = vjp_p(g)
+                            st = add_grads(st, s, c, gp)
                     st["occ"] = st["occ"].at[i].set(
                         jnp.sum(st["used"]).astype(jnp.int32))
                     if has_w:
@@ -414,40 +531,101 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
                     return st
                 return br
 
-            for wave in prog.waves:
-                branches = [make_branch(d, wave.compute[d])
-                            if d in wave.compute else idle
-                            for d in range(D)]
-                state = lax.switch(idx, branches, state)
-                for rnd in wave.rounds:
-                    buf = state["fy"] if rnd.kind == "fwd" else state["bg"]
-                    recv = lax.ppermute(buf, axis_name, rnd.pairs)
-                    on = [False] * D
-                    cs = [0] * D
-                    ms = [0] * D
-                    for t in rnd.transfers:
-                        on[t.dst_dev] = True
-                        cs[t.dst_dev] = chunk_of[t.dst_stage]
-                        ms[t.dst_dev] = t.microbatch
-                    c = jnp.asarray(cs)[idx]
-                    m = jnp.asarray(ms)[idx]
-                    delta = jnp.where(jnp.asarray(on)[idx], recv,
-                                      jnp.zeros_like(recv))
-                    key = "inbox" if rnd.kind == "fwd" else "cot"
-                    state[key] = state[key].at[c, m].add(delta)
+            if dispatch == "rolled":
+                keys, instr, m_tab, item_tab, R, comm = \
+                    _rolled_tables(prog)
+                branches = [idle] + [make_branch(k, s) for k, s in keys]
+                instr_a = jnp.asarray(instr)
+                m_a = jnp.asarray(m_tab)
+                item_a = jnp.asarray(item_tab)
+                if R:
+                    on_t, src_t, c_t, m2_t, isb_t = comm
+                    on_a, src_a = jnp.asarray(on_t), jnp.asarray(src_t)
+                    c_a, m2_a = jnp.asarray(c_t), jnp.asarray(m2_t)
+                    isb_a = jnp.asarray(isb_t)
+
+                def comm_rounds(w, st):
+                    def round_body(r, st):
+                        st = dict(st)
+                        isb = isb_a[w, r]
+                        buf = jnp.where(isb, st["bg"], st["fy"])
+                        gathered = lax.all_gather(buf, axis_name)
+                        recv = gathered[src_a[w, r, idx]]
+                        onv = on_a[w, r, idx]
+                        cc, mm = c_a[w, r, idx], m2_a[w, r, idx]
+                        delta = jnp.where(onv, recv,
+                                          jnp.zeros_like(recv))
+                        zero = jnp.zeros_like(delta)
+                        st["inbox"] = st["inbox"].at[cc, mm].add(
+                            jnp.where(isb, zero, delta))
+                        st["cot"] = st["cot"].at[cc, mm].add(
+                            jnp.where(isb, delta, zero))
+                        return st
+                    return lax.fori_loop(0, R, round_body, st)
+
+                def wave_body(w, st):
+                    st = lax.switch(instr_a[w, idx], branches, st,
+                                    m_a[w, idx], item_a[w, idx])
+                    if R:
+                        st = comm_rounds(w, st)
+                    return st
+
+                state = lax.fori_loop(0, len(prog.waves), wave_body,
+                                      state)
+            else:                                # dispatch == "switch"
+                stage_br: Dict[Tuple[str, int], Callable] = {}
+
+                def static_branch(d, instr):
+                    i, kind, s, _c, m = instr
+                    if (kind, s) not in stage_br:
+                        stage_br[(kind, s)] = make_branch(kind, s)
+                    br = stage_br[(kind, s)]
+                    return lambda st, br=br, m=m, i=i: br(
+                        st, jnp.int32(m), jnp.int32(i))
+
+                for wave in prog.waves:
+                    branches = [static_branch(d, wave.compute[d])
+                                if d in wave.compute
+                                else (lambda st: st)
+                                for d in range(D)]
+                    state = lax.switch(idx, branches, state)
+                    for rnd in wave.rounds:
+                        buf = state["fy"] if rnd.kind == "fwd" \
+                            else state["bg"]
+                        recv = lax.ppermute(buf, axis_name, rnd.pairs)
+                        on = [False] * D
+                        cs = [0] * D
+                        ms = [0] * D
+                        for t in rnd.transfers:
+                            on[t.dst_dev] = True
+                            cs[t.dst_dev] = chunk_of[t.dst_stage]
+                            ms[t.dst_dev] = t.microbatch
+                        c = jnp.asarray(cs)[idx]
+                        m = jnp.asarray(ms)[idx]
+                        delta = jnp.where(jnp.asarray(on)[idx], recv,
+                                          jnp.zeros_like(recv))
+                        key = "inbox" if rnd.kind == "fwd" else "cot"
+                        state[key] = state[key].at[c, m].add(delta)
 
             outputs = lax.psum(state["out"], axis_name)
             loss = lax.psum(state["loss"], axis_name)
-            grads = jax.tree.map(lambda a: a[None], state["grads"])
+            if hetero:
+                grads = jax.tree.map(
+                    lambda a: lax.psum(a, axis_name), state["grads"])
+            else:
+                grads = jax.tree.map(lambda a: a[None], state["grads"])
             return (outputs, loss, grads,
                     state["occ"][None], state["wocc"][None])
 
-        spec_p = jax.tree.map(
-            lambda a: P(axis_name, *([None] * (a.ndim - 1))),
-            local_params)
-        grads_spec = jax.tree.map(
-            lambda a: P(axis_name, *([None] * (a.ndim - 1))),
-            local_params)
+        if hetero:
+            spec_p = jax.tree.map(
+                lambda a: P(*([None] * a.ndim)), local_params)
+            grads_spec = spec_p
+        else:
+            spec_p = jax.tree.map(
+                lambda a: P(axis_name, *([None] * (a.ndim - 1))),
+                local_params)
+            grads_spec = spec_p
         return shard_map(
             body, mesh=mesh,
             in_specs=(spec_p, P(*([None] * mbs.ndim))),
@@ -456,11 +634,27 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
             check_rep=False,
         )(local_params, mbs)
 
-    core_fn = jax.jit(core) if jit else core
+    core_fn = jax.jit(core, static_argnames=("hetero",)) if jit else core
+
+    def prepare(stage_params):
+        """Raw stage params -> the representation ``core`` consumes
+        (list of trees pass through; stacked trees go device-local)."""
+        if isinstance(stage_params, (list, tuple)):
+            return tuple(stage_params)
+        return _stack_local(prog, stage_params)
+
+    def finish_grads(grads_repr):
+        """``core``'s grads output -> ``execute_schedule``'s
+        ``param_grads`` shape (list for hetero, stage-stacked else)."""
+        if isinstance(grads_repr, tuple):
+            return list(grads_repr)
+        return _unstack_grads(prog, grads_repr)
 
     def runner(stage_params, microbatches):
-        local = _stack_local(prog, stage_params)
-        outputs, loss, grads_dl, occ, wocc = core_fn(local, microbatches)
+        hetero = isinstance(stage_params, (list, tuple))
+        local = prepare(stage_params)
+        outputs, loss, grads_repr, occ, wocc = core_fn(
+            local, microbatches, hetero=hetero)
         occ_np = np.asarray(occ)
         wocc_np = np.asarray(wocc)
         trace = [(item_id(it), it[2], int(occ_np[it[2], i]))
@@ -476,7 +670,7 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
         return {
             "outputs": outputs,
             "loss": loss,
-            "param_grads": _unstack_grads(prog, grads_dl),
+            "param_grads": finish_grads(grads_repr),
             "peak_activations_per_device": peak,
             "peak_w_residuals_per_device": w_peak,
             "activation_trace": trace,
@@ -484,6 +678,12 @@ def build_spmd_runner(stage_fn: Callable, graph: PipelineGraph,
             "program": prog,
         }
 
+    # expose the pieces make_resilient_train_step's value_and_grad hook
+    # needs to keep everything inside one outer jit
+    runner.program = prog
+    runner.core = core_fn
+    runner.prepare = prepare
+    runner.finish_grads = finish_grads
     return runner
 
 
@@ -500,8 +700,10 @@ def run_schedule_spmd(*args: Any, mesh: Optional[Mesh] = None,
                       axis_name: str = "pp",
                       microbatch_loss: Optional[Callable] = None,
                       program: Optional[SPMDProgram] = None,
-                      stage_fn: Optional[Callable] = None,
+                      stage_fn: Any = None,
                       stage_params: Any = None,
+                      trainable: Optional[Sequence[bool]] = None,
+                      dispatch: str = "rolled",
                       seed: int = 0) -> Dict[str, Any]:
     """Execute a schedule timeline distributed under ``shard_map``.
 
@@ -513,15 +715,19 @@ def run_schedule_spmd(*args: Any, mesh: Optional[Mesh] = None,
     * ``run_schedule_spmd(plan, mllm, microbatches)`` — the plan form:
       an :class:`~repro.parallel.plan.MLLMParallelPlan` is applied to
       ``mllm`` in SPMD mode (``plan.apply(mllm, mode="spmd")``), the
-      mesh is derived from ``split_devices`` placement, and unless a
-      ``stage_fn``/``stage_params`` pair is supplied the toy residual
-      stage model sized to the microbatches' feature dim runs the
-      timeline (the same model the memory-validation harness uses —
-      module profiles are cost models, not callables).
+      mesh is derived from ``split_devices`` placement. ``stage_fn``
+      selects what runs the timeline: real stage callables (e.g.
+      ``models.stages`` bundle fns, with matching ``stage_params``), or
+      the explicit sentinel ``stage_fn="toy"`` for the toy residual
+      stage model sized to the microbatches' feature dim (the model the
+      memory-validation harness uses — module profiles are cost models,
+      not callables). Passing ``stage_fn=None`` still falls back to the
+      toy model but warns: real-model callers must opt in explicitly so
+      they cannot accidentally verify the wrong model.
 
     Returns the ``execute_schedule`` result dict (outputs, loss,
-    stage-stacked param_grads, per-device peaks, activation_trace) plus
-    the compiled ``program``.
+    param_grads, per-device peaks, activation_trace) plus the compiled
+    ``program``.
     """
     if _is_typed_plan(args[0]):
         plan, mllm, microbatches = args
@@ -533,7 +739,15 @@ def run_schedule_spmd(*args: Any, mesh: Optional[Mesh] = None,
         if mesh is None:
             mesh = mesh_from_plan(plan, mllm, int(sim["num_devices"]),
                                   axis_name)
-        if stage_fn is None:
+        if stage_fn is None or stage_fn == "toy":
+            if stage_fn is None:
+                import warnings
+                warnings.warn(
+                    "run_schedule_spmd(plan, mllm, ...) got no "
+                    "stage_fn and will run the TOY stage model, not "
+                    "the MLLM; pass stage_fn=\"toy\" to silence this, "
+                    "or real stage fns (models.stages.build_mllm_"
+                    "stages) to execute the model", stacklevel=2)
             stage_fn, stage_params = toy_stage_model(
                 len(graph.stages), int(microbatches.shape[-1]),
                 seed=seed)
@@ -543,7 +757,8 @@ def run_schedule_spmd(*args: Any, mesh: Optional[Mesh] = None,
     runner = build_spmd_runner(stage_fn, graph, sim, mesh=mesh,
                                axis_name=axis_name,
                                microbatch_loss=microbatch_loss,
-                               program=prog)
+                               program=prog, trainable=trainable,
+                               dispatch=dispatch)
     return runner(stage_params, microbatches)
 
 
@@ -556,8 +771,9 @@ def spmd_parity_report(executor: Dict[str, Any], *, d_model: int = 16,
     toy residual stage model, and report the parity: losses, the max
     elementwise grad difference, whether the measured per-device peaks
     and activation traces agree. The cheap end-to-end proof that a
-    plan's compiled SPMD program computes what its timeline claims,
-    used by ``launch/train --spmd`` before any real step runs."""
+    plan's compiled SPMD program computes what its timeline claims
+    (the memory-validation harness and tests use it; ``launch/train
+    --spmd`` itself trains the real partitioned model)."""
     from repro.core.modality_parallel import execute_schedule
     graph = executor["sim_graph"]
     sim = executor["schedule"]

@@ -136,6 +136,16 @@ class CheckpointManager:
         meta = ckpt.read_manifest(d).get("meta", {})
         return tree, got_step, meta
 
+    def peek_meta(self) -> Dict[str, Any]:
+        """Meta of the newest checkpoint WITHOUT loading any arrays
+        (empty dict when there is no checkpoint). Lets a launcher
+        inspect e.g. ``meta["mode"]`` / ``meta["spmd_layout"]`` before
+        deciding what shape of state tree to restore into."""
+        d = self.latest()
+        if d is None:
+            return {}
+        return dict(ckpt.read_manifest(d).get("meta", {}))
+
     # -- retention ---------------------------------------------------------
 
     def _retain(self) -> None:

@@ -69,7 +69,8 @@ def default_controls() -> Dict[str, Any]:
 
 def make_resilient_train_step(loss_fn, ocfg: opt.AdamWConfig,
                               frozen_mask=None, *,
-                              ema_decay: float = 0.98):
+                              ema_decay: float = 0.98,
+                              value_and_grad_fn=None):
     """``step(params, opt_state, health, batch, controls) ->
     (params, opt_state, health, bundle)`` — ``make_train_step`` with
     the health bundle fused in and the update gated on step health.
@@ -79,10 +80,19 @@ def make_resilient_train_step(loss_fn, ocfg: opt.AdamWConfig,
     ``make_mllm_train_step``'s second return). The bundle is one f32
     ``[len(BUNDLE_KEYS)]`` vector — a single device->host transfer
     per step, no extra syncs.
+
+    ``value_and_grad_fn(params, batch) -> ((loss, aux), grads)``
+    overrides the default ``jax.value_and_grad(loss_fn)`` — this is
+    how executors that compute grads themselves (the SPMD schedule
+    runner, whose backward is the schedule's B/W items, not one
+    autodiff sweep) plug into the same health gate. When set,
+    ``loss_fn`` may be ``None``.
     """
+    if value_and_grad_fn is None:
+        value_and_grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
     def step(params, opt_state, health, batch, controls):
-        (loss, _aux), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
+        (loss, _aux), grads = value_and_grad_fn(params, batch)
         # deterministic fault injection: a traced switch multiplies
         # every grad by NaN — exactly what a real overflow looks like
         # downstream, with none of the nondeterminism

@@ -146,6 +146,23 @@ class ResilientTrainer:
                               cursor=self.stream.cursor)
         return path
 
+    def adopt_state(self, params, opt_state, health=None, *,
+                    step: int, cursor: Optional[int] = None) -> None:
+        """Install externally-restored training state (cross-mode
+        resume: the launcher loaded a checkpoint written under a
+        DIFFERENT param layout — e.g. a replay-mode tree resumed into
+        an SPMD run — converted it, and hands the result here instead
+        of ``resume=True``'s like-tree restore). Seeks the stream and
+        logs the adoption so the event trail shows where the state
+        came from."""
+        self.params = params
+        self.opt_state = opt_state
+        self.health = health if health is not None else init_health()
+        self.step = int(step)
+        self.stream.seek(int(cursor if cursor is not None else step))
+        self.monitor.log.emit("adopt", self.step,
+                              cursor=self.stream.cursor)
+
     def _restore(self, why: str) -> None:
         tree, step, meta = self.manager.restore(self._state_tree())
         self.params, self.opt_state = tree["params"], tree["opt"]

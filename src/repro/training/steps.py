@@ -213,32 +213,44 @@ def make_cp_train_step(cfg: ModelConfig, layout, mesh,
 def make_spmd_train_step(stage_fn, graph, sim,
                          ocfg: Optional[opt.AdamWConfig] = None, *,
                          mesh=None, axis_name: str = "pp",
-                         microbatch_loss=None, frozen_mask=None):
+                         microbatch_loss=None, frozen_mask=None,
+                         trainable=None, grad_scale: float = 1.0,
+                         dispatch: str = "rolled", program=None):
     """Pipeline-parallel train step driven by a simulated schedule
     timeline, executed distributed (``repro.parallel.spmd``).
 
-    ``stage_fn(lp, x) -> y`` / stage-stacked ``stage_params`` follow
-    the ``execute_schedule`` contract; ``graph``/``sim`` come from the
-    plan (``executor["sim_graph"]`` / ``executor["schedule"]`` of
-    ``plan.apply(mllm, mode="spmd")``). The schedule program is
-    compiled once; every ``step(stage_params, opt_state,
-    microbatches)`` replays it under ``shard_map`` (the jitted core is
-    cached across steps) and applies AdamW to the stage-stacked grads.
-    Frozen stages contribute exactly-zero grads by construction (the
-    schedule gives them no weight-grad items), so ``frozen_mask`` is
-    only needed to keep optimizer state out of frozen slots."""
+    ``stage_fn`` / ``stage_params`` follow the ``execute_schedule``
+    contract — a single homogeneous callable with stage-stacked params,
+    or a real-model stage list (``models.stages.StageBundle``:
+    per-stage 3-arg fns, list params, ``trainable`` flags);
+    ``graph``/``sim`` come from the plan (``executor["sim_graph"]`` /
+    ``executor["schedule"]`` of ``plan.apply(mllm, mode="spmd")``, pass
+    ``program=executor["spmd_program"]`` to reuse its compile). The
+    schedule program is compiled once; every ``step(stage_params,
+    opt_state, microbatches)`` replays it under ``shard_map`` (the
+    jitted core is cached across steps) and applies AdamW — list
+    params flow through AdamW as a pytree, with ``frozen_mask``
+    keeping optimizer state out of frozen slots. ``grad_scale``
+    rescales the summed per-microbatch loss/grads to the full-batch
+    mean (``1/num_microbatches`` for ``StageBundle.microbatch_loss``).
+    Frozen stages contribute exactly-zero grads by construction."""
     from repro.parallel.spmd import build_spmd_runner
     ocfg = ocfg or opt.AdamWConfig()
     runner = build_spmd_runner(stage_fn, graph, sim, mesh=mesh,
                                axis_name=axis_name,
-                               microbatch_loss=microbatch_loss)
+                               microbatch_loss=microbatch_loss,
+                               trainable=trainable, dispatch=dispatch,
+                               program=program)
 
     def step(stage_params, opt_state, microbatches):
         res = runner(stage_params, microbatches)
+        grads, loss = res["param_grads"], res["loss"]
+        if grad_scale != 1.0:
+            grads = jax.tree.map(lambda g: g * grad_scale, grads)
+            loss = loss * grad_scale
         params, opt_state, om = opt.update(
-            ocfg, res["param_grads"], opt_state, stage_params,
-            frozen_mask)
-        return params, opt_state, {"loss": res["loss"], **om}
+            ocfg, grads, opt_state, stage_params, frozen_mask)
+        return params, opt_state, {"loss": loss, **om}
 
     return step
 

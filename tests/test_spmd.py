@@ -172,7 +172,7 @@ def test_spmd_golden_plan_matches_reference():
     assert ex["spmd_program"] is not None
     n_mb, d = plan.schedule.num_microbatches, 16
     mbs = jax.random.normal(jax.random.PRNGKey(3), (n_mb, 1, 4, d))
-    got = run_schedule_spmd(plan, mllm, mbs)
+    got = run_schedule_spmd(plan, mllm, mbs, stage_fn="toy")
     fn, params = toy_stage_model(len(graph.stages), d)
     ref = execute_schedule(fn, params, mbs, graph, sim)
     assert_equivalent(got, ref)
